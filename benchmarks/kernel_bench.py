@@ -1,0 +1,58 @@
+"""Micro-benchmarks: Pallas kernels (interpret) vs pure-jnp oracle on CPU.
+
+On CPU the interpret-mode kernel is NOT expected to be faster — the numbers
+recorded here are correctness-path timings plus the analytic TPU roofline
+for each kernel (bytes touched / HBM bandwidth), which is what the kernel
+is designed to hit on hardware.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.quantize_ef import quantize_ef
+
+HBM_BW = 819e9
+
+
+def _time(fn, *args, reps=3):
+    fn(*args)  # compile
+    t0 = time.time()
+    for _ in range(reps):
+        jax.block_until_ready(fn(*args))
+    return (time.time() - t0) / reps * 1e6  # µs
+
+
+def main():
+    # quantize+EF: the per-round uplink hot spot
+    n = 1 << 20
+    msg = jax.random.normal(jax.random.PRNGKey(0), (n,)) * 0.1
+    cache = jnp.zeros((n,))
+    us_k = _time(lambda m, c: quantize_ef(m, c, interpret=True), msg, cache)
+    us_r = _time(jax.jit(lambda m, c: ref.quantize_ef_ref(
+        m, c, levels=255, vmin=-0.25, vmax=0.25)), msg, cache)
+    bytes_touched = n * (4 + 4 + 1 + 4)  # msg + cache reads, wire + cache writes
+    tpu_floor_us = bytes_touched / HBM_BW * 1e6
+    print(f"quantize_ef_pallas_interpret,{us_k:.0f},tpu_roofline_us={tpu_floor_us:.1f}")
+    print(f"quantize_ef_jnp_ref,{us_r:.0f},bytes={bytes_touched}")
+
+    # flash attention: prefill hot spot
+    b, s, h, d = 1, 1024, 4, 128
+    ks = jax.random.split(jax.random.PRNGKey(1), 3)
+    q, k, v = (jax.random.normal(kk, (b, s, h, d), jnp.float32) for kk in ks)
+    us_f = _time(lambda *a: flash_attention(*a, causal=True, interpret=True),
+                 q, k, v)
+    us_fr = _time(jax.jit(lambda *a: ref.flash_attention_ref(*a, causal=True)),
+                  q, k, v)
+    flops = 4 * b * h * s * s * d / 2
+    tpu_us = flops / 197e12 * 1e6
+    print(f"flash_attention_pallas_interpret,{us_f:.0f},tpu_compute_us={tpu_us:.1f}")
+    print(f"flash_attention_jnp_ref,{us_fr:.0f},flops={flops:.2e}")
+
+
+if __name__ == "__main__":
+    main()

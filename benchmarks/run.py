@@ -1,0 +1,49 @@
+"""Benchmark driver — one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV lines.  ``--full`` runs the
+paper-scale versions (minutes); the default quick mode validates the same
+qualitative claims at reduced scale so CI stays fast.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import traceback
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    args, _ = ap.parse_known_args()
+    quick = not args.full
+
+    failures = []
+
+    def section(name, fn):
+        print(f"\n# --- {name} ---")
+        try:
+            fn()
+        except Exception:
+            traceback.print_exc()
+            failures.append(name)
+
+    from . import fig4_trajectory, kernel_bench, table1_error_feedback
+    from . import roofline, table2_space_comparison
+
+    section("Table 1: error feedback ablation",
+            lambda: table1_error_feedback.main(quick=quick))
+    section("Fig 4: error trajectory",
+            lambda: fig4_trajectory.main(quick=quick))
+    section("Table 2: constellation comparison",
+            lambda: table2_space_comparison.main(quick=quick))
+    section("Kernel micro-benchmarks", kernel_bench.main)
+    section("Roofline (dry-run aggregation)", roofline.main)
+
+    if failures:
+        print("\nFAILED sections:", failures)
+        sys.exit(1)
+    print("\nall benchmark sections completed")
+
+
+if __name__ == "__main__":
+    main()

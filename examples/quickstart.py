@@ -1,0 +1,42 @@
+"""Quickstart: communication-efficient federated learning in 40 lines.
+
+Trains the paper's regularized logistic regression over 50 agents with
+bi-directional uniform quantization + error feedback (Algorithm 2), and
+prints the optimality-error trajectory vs the no-EF ablation (Algorithm 1).
+
+Run:  PYTHONPATH=src python examples/quickstart.py
+"""
+import jax
+import jax.numpy as jnp
+
+from repro.core.compression import UniformQuantizer
+from repro.core.error_feedback import EFChannel
+from repro.core.fedlt import FedLT, optimality_error
+from repro.data.logistic import generate, make_local_loss, solve_global
+
+
+def main():
+    n_agents, dim = 50, 50
+    data, _ = generate(jax.random.PRNGKey(0), n_agents=n_agents, m=200, dim=dim)
+    loss = make_local_loss(eps=50.0, n_agents=n_agents)
+    x_star = solve_global(data, eps=50.0)
+
+    quant = UniformQuantizer(levels=10, vmin=-1, vmax=1, clip=True)
+    for ef in (False, True):
+        alg = FedLT(loss=loss, n_epochs=10, gamma=0.005, rho=20.0,
+                    uplink=EFChannel(quant, enabled=ef),
+                    downlink=EFChannel(quant, enabled=ef))
+        state = alg.init(jnp.zeros((dim,)), n_agents)
+        active = jnp.ones((n_agents,), bool)
+        step = jax.jit(lambda s, k: alg.round(s, data, active, k)[0])
+        keys = jax.random.split(jax.random.PRNGKey(1), 400)
+        print(f"\n=== Algorithm {'2 (with EF)' if ef else '1 (no EF)'} ===")
+        for k in range(400):
+            state = step(state, keys[k])
+            if k % 80 == 0 or k == 399:
+                err = float(optimality_error(state.x, x_star))
+                print(f"  round {k:4d}   e_k = {err:.6f}")
+
+
+if __name__ == "__main__":
+    main()

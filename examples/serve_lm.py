@@ -1,0 +1,60 @@
+"""Serving example: batched prefill + decode with the KV/SSM cache.
+
+Serves the coordinator model over a batch of token prompts: one prefill
+step builds the cache, then greedy decode streams tokens — the same
+``serve_step`` path the decode-shaped dry-runs lower.  Works for any
+assigned architecture's smoke variant (``--arch``), demonstrating cache
+handling across attention, sliding-window, MoE, Mamba2 and RWKV6 blocks.
+
+Run:  PYTHONPATH=src python examples/serve_lm.py --arch mixtral-8x7b --tokens 16
+"""
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ARCHS, smoke_variant
+from repro.launch.serve import make_decode_step, make_prefill_step
+from repro.models.transformer import init_params
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="mixtral-8x7b", choices=sorted(ARCHS))
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=64)
+    ap.add_argument("--tokens", type=int, default=16)
+    args = ap.parse_args()
+
+    cfg = smoke_variant(ARCHS[args.arch])
+    if cfg.arch_type == "vlm":
+        print("note: VLM smoke serve uses text tokens only")
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    prompts = jax.random.randint(jax.random.PRNGKey(1),
+                                 (args.batch, args.prompt_len), 0,
+                                 cfg.vocab_size)
+
+    prefill = jax.jit(make_prefill_step(cfg, backend="xla"))
+    decode = jax.jit(make_decode_step(cfg, backend="xla"))
+
+    t0 = time.time()
+    logits, cache = prefill(params, {"tokens": prompts})
+    tok = jnp.argmax(logits, axis=-1)[:, None]
+    print(f"prefill {args.batch}×{args.prompt_len} in {time.time()-t0:.2f}s")
+
+    out = [tok]
+    t0 = time.time()
+    for _ in range(args.tokens - 1):
+        logits, cache = decode(params, cache, tok)
+        tok = jnp.argmax(logits, axis=-1)[:, None]
+        out.append(tok)
+    dt = time.time() - t0
+    gen = jnp.concatenate(out, axis=1)
+    print(f"decoded {args.tokens - 1} steps in {dt:.2f}s "
+          f"({(args.tokens - 1) * args.batch / max(dt, 1e-9):.1f} tok/s)")
+    print("sample:", gen[0].tolist())
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,75 @@
+"""End-to-end driver: federated training of a transformer LM (deploy path).
+
+Each "satellite" holds its own heterogeneous token stream (per-agent Markov
+language); one round = N_e local prox-epochs + quantized/EF uplink +
+aggregation + quantized/EF downlink — the same ``DeployFedLT.round_step``
+the multi-pod dry-run lowers, here executed for real on the host devices.
+
+Presets:
+  smoke (default)  ~6M params,  fits a CPU run in minutes
+  100m             ~100M params — the "train a ~100M model" driver; same
+                   code path, sized for a real (TPU) allocation.
+
+Run:  PYTHONPATH=src python examples/train_federated_lm.py --rounds 20
+"""
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.deploy import DeployFedLT
+from repro.data.synthetic import make_batch
+from repro.models.config import ModelConfig
+
+PRESETS = {
+    "smoke": ModelConfig(
+        name="fed-lm-smoke", arch_type="dense", n_layers=4, d_model=256,
+        n_heads=4, n_kv_heads=4, d_ff=1024, vocab_size=2048, max_seq=512,
+        chunk_size=64, tie_embeddings=True, dtype="float32"),
+    "100m": ModelConfig(
+        name="fed-lm-100m", arch_type="dense", n_layers=12, d_model=768,
+        n_heads=12, n_kv_heads=12, d_ff=3072, vocab_size=32000, max_seq=2048,
+        tie_embeddings=True, dtype="bfloat16"),
+}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--preset", default="smoke", choices=sorted(PRESETS))
+    ap.add_argument("--rounds", type=int, default=20)
+    ap.add_argument("--agents", type=int, default=4)
+    ap.add_argument("--batch", type=int, default=4, help="per-agent batch")
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--n-epochs", type=int, default=2)
+    ap.add_argument("--no-compress", action="store_true")
+    args = ap.parse_args()
+
+    cfg = PRESETS[args.preset]
+    alg = DeployFedLT(cfg=cfg, n_epochs=args.n_epochs, gamma=0.02, rho=10.0,
+                      compress=not args.no_compress, levels=1023,
+                      vmin=-0.5, vmax=0.5)
+    state = alg.init(jax.random.PRNGKey(0), args.agents)
+    n_params = sum(x.size for x in jax.tree_util.tree_leaves(state.y_hat))
+    print(f"model: {cfg.name}  params={n_params/1e6:.1f}M  "
+          f"agents={args.agents}  compress={not args.no_compress}")
+
+    step = jax.jit(lambda s, b: alg.round_step(s, b))
+
+    def batches(round_idx):
+        keys = [jax.random.fold_in(jax.random.PRNGKey(7 + i), round_idx)
+                for i in range(args.agents)]
+        per = [make_batch(cfg, k, args.batch, args.seq) for k in keys]
+        return jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *per)
+
+    for k in range(args.rounds):
+        t0 = time.time()
+        state, metrics = step(state, batches(k))
+        loss = float(metrics["loss"])
+        print(f"round {k:4d}  local-loss={loss:.4f}  ({time.time()-t0:.1f}s)")
+
+    print("done — coordinator model ŷ is state.y_hat (servable).")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,24 @@
+"""Link budget / transmission-time model for GS and inter-satellite links."""
+from __future__ import annotations
+
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class LinkModel:
+    """Transmission times for model updates (bytes / rate + latency)."""
+    gs_rate: float = 100e6 / 8        # 100 Mbit/s sat↔GS → bytes/s
+    isl_rate: float = 1e9 / 8         # 1 Gbit/s optical ISL
+    gs_latency: float = 0.02          # s (LEO slant range)
+    isl_latency: float = 0.005
+
+    def gs_time(self, nbytes: float) -> float:
+        return self.gs_latency + nbytes / self.gs_rate
+
+    def isl_time(self, nbytes: float, hops: int = 1) -> float:
+        return hops * (self.isl_latency + nbytes / self.isl_rate)
+
+
+def message_bytes(n_params: int, bits_per_scalar: float) -> float:
+    """On-wire size of one model update under a given compressor."""
+    return n_params * bits_per_scalar / 8.0

@@ -1,0 +1,114 @@
+"""Walker constellation propagation + ground-station visibility windows.
+
+FLySTacK-fidelity orbital model (Kim et al., 2024): circular LEO orbits,
+spherical Earth, Walker-delta phasing.  Positions are propagated
+analytically; a satellite can talk to the ground station when its elevation
+above the GS horizon exceeds a mask angle.  NumPy only — this is host-side
+scheduling substrate, not device compute.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import numpy as np
+
+R_EARTH = 6371.0e3           # m
+MU = 3.986004418e14          # m³/s²
+OMEGA_EARTH = 7.2921159e-5   # rad/s
+
+
+@dataclasses.dataclass(frozen=True)
+class Walker:
+    """Walker-delta constellation i:t/p/f."""
+    n_sats: int = 100
+    n_planes: int = 10
+    altitude: float = 550e3
+    inclination: float = 97.6        # degrees (sun-synchronous — polar GS)
+    phasing: int = 1                 # relative spacing factor f
+
+    @property
+    def sats_per_plane(self) -> int:
+        return self.n_sats // self.n_planes
+
+    @property
+    def radius(self) -> float:
+        return R_EARTH + self.altitude
+
+    @property
+    def period(self) -> float:
+        return 2 * np.pi * np.sqrt(self.radius ** 3 / MU)
+
+    def positions(self, t: np.ndarray) -> np.ndarray:
+        """ECI positions (…, n_sats, 3) at times t (seconds, array)."""
+        t = np.asarray(t, dtype=np.float64)
+        inc = np.radians(self.inclination)
+        n = 2 * np.pi / self.period                       # mean motion
+        spp = self.sats_per_plane
+        plane = np.arange(self.n_sats) // spp             # (S,)
+        slot = np.arange(self.n_sats) % spp
+        raan = 2 * np.pi * plane / self.n_planes
+        phase = (2 * np.pi * slot / spp
+                 + 2 * np.pi * self.phasing * plane / self.n_sats)
+        u = phase + n * t[..., None]                      # argument of latitude
+        # orbital plane → ECI
+        x_orb = self.radius * np.cos(u)
+        y_orb = self.radius * np.sin(u)
+        cos_r, sin_r = np.cos(raan), np.sin(raan)
+        cos_i, sin_i = np.cos(inc), np.sin(inc)
+        x = x_orb * cos_r - y_orb * cos_i * sin_r
+        y = x_orb * sin_r + y_orb * cos_i * cos_r
+        z = y_orb * sin_i
+        return np.stack([x, y, z], axis=-1)
+
+
+@dataclasses.dataclass(frozen=True)
+class GroundStation:
+    lat: float = 67.86     # Kiruna, a common polar LEO downlink site
+    lon: float = 20.22
+    mask_angle: float = 10.0  # degrees above horizon
+
+    def position(self, t: np.ndarray) -> np.ndarray:
+        """ECI position of the GS at times t (Earth rotation included)."""
+        t = np.asarray(t, dtype=np.float64)
+        lat, lon0 = np.radians(self.lat), np.radians(self.lon)
+        lon = lon0 + OMEGA_EARTH * t
+        return R_EARTH * np.stack(
+            [np.cos(lat) * np.cos(lon), np.cos(lat) * np.sin(lon),
+             np.full_like(lon, np.sin(lat))], axis=-1)
+
+
+def elevation(sat_pos: np.ndarray, gs_pos: np.ndarray) -> np.ndarray:
+    """Elevation (degrees) of satellites above the GS local horizon.
+
+    sat_pos: (..., S, 3); gs_pos: (..., 3)."""
+    rel = sat_pos - gs_pos[..., None, :]
+    zen = gs_pos / np.linalg.norm(gs_pos, axis=-1, keepdims=True)
+    proj = np.einsum("...sk,...k->...s", rel, zen)
+    dist = np.linalg.norm(rel, axis=-1)
+    return np.degrees(np.arcsin(np.clip(proj / dist, -1, 1)))
+
+
+def visible(walker: Walker, gs: GroundStation, t: np.ndarray) -> np.ndarray:
+    """Bool (…, n_sats): GS link available at times t."""
+    return elevation(walker.positions(t), gs.position(t)) > gs.mask_angle
+
+
+def next_window(walker: Walker, gs: GroundStation, t0: float, sat: int,
+                horizon: float = 7200.0, dt: float = 10.0) -> Optional[float]:
+    """Seconds from t0 until satellite `sat` next sees the GS (None if not
+    within `horizon`)."""
+    ts = t0 + np.arange(0.0, horizon, dt)
+    vis = visible(walker, gs, ts)[:, sat]
+    idx = np.argmax(vis)
+    if not vis[idx]:
+        return None
+    return float(ts[idx] - t0)
+
+
+def in_plane_neighbors(walker: Walker, sat: int) -> tuple:
+    """The two ring neighbours of `sat` within its orbital plane (ISL)."""
+    spp = walker.sats_per_plane
+    plane, slot = sat // spp, sat % spp
+    return (plane * spp + (slot - 1) % spp,
+            plane * spp + (slot + 1) % spp)

@@ -1,0 +1,69 @@
+"""Round-time-minimizing active-set selection (Kim et al., 2025 style).
+
+Given the constellation state at time t, pick which satellites participate
+in the next round:
+
+  * `k_direct` satellites with the soonest GS windows connect directly
+    (cost = wait-until-window + uplink transmission time);
+  * each direct satellite can additionally relay up to `n_relay` in-plane
+    neighbours through ISLs (cost += ISL hop + forwarded transmission) —
+    the paper's "space-ification": more participants per round without more
+    sat-to-ground links.
+
+Returns the active set S_k, the per-satellite completion times, and the
+round duration (max over the active set — the coordinator aggregates when
+the last scheduled update lands).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional, Set, Tuple
+
+import numpy as np
+
+from .links import LinkModel
+from .orbits import GroundStation, Walker, in_plane_neighbors, next_window
+
+
+@dataclasses.dataclass(frozen=True)
+class Scheduler:
+    walker: Walker
+    gs: GroundStation
+    link: LinkModel = LinkModel()
+    k_direct: int = 4
+    n_relay: int = 2           # forwarded neighbours per direct satellite
+    compute_time: float = 30.0  # on-board local-training time per round
+
+    def select(self, t0: float, msg_bytes: float,
+               rng: Optional[np.random.Generator] = None
+               ) -> Tuple[np.ndarray, float]:
+        """Returns (active bool (n_sats,), round_duration_seconds)."""
+        n = self.walker.n_sats
+        # one propagation for all satellites over the lookahead horizon
+        ts = t0 + np.arange(0.0, 7200.0, 10.0)
+        from .orbits import visible
+        vis = visible(self.walker, self.gs, ts)          # (T, S)
+        first = np.argmax(vis, axis=0)                    # first True index
+        has = vis[first, np.arange(n)]
+        waits = np.where(has, first * 10.0, np.inf)
+        order = np.argsort(waits)
+        direct = [s for s in order[: self.k_direct] if np.isfinite(waits[s])]
+        active: Set[int] = set(direct)
+        completion = {}
+        for s in direct:
+            tx = self.link.gs_time(msg_bytes)
+            completion[s] = self.compute_time + waits[s] + tx
+            # relay neighbours through ISL, forwarded over the same GS link
+            nbrs = in_plane_neighbors(self.walker, s)
+            for i, nb in enumerate(nbrs[: self.n_relay]):
+                if nb in active:
+                    continue
+                active.add(nb)
+                completion[nb] = (self.compute_time + waits[s]
+                                  + self.link.isl_time(msg_bytes)
+                                  + (i + 2) * self.link.gs_time(msg_bytes))
+        mask = np.zeros(n, bool)
+        for s in active:
+            mask[s] = True
+        duration = max(completion.values()) if completion else self.compute_time
+        return mask, float(duration)

@@ -1,0 +1,18 @@
+"""The paper's contribution: Fed-LT + compression + error feedback (+ the
+space-ified Fed-LTSat), as composable JAX modules."""
+from .baselines import LED, FedAvg, FedProx, FiveGCS
+from .compression import (Identity, RandD, ScaledSign, TopK,
+                          UniformQuantizer, make_compressor,
+                          quantize_decode, quantize_encode)
+from .deploy import DeployFedLT, DeployState
+from .error_feedback import EFChannel
+from .fedlt import FedLT, FedLTState, optimality_error
+from .fedlt_sat import RoundLog, SpaceRunner
+
+__all__ = [
+    "FedLT", "FedLTState", "optimality_error", "EFChannel",
+    "UniformQuantizer", "RandD", "TopK", "ScaledSign", "Identity",
+    "make_compressor", "quantize_encode", "quantize_decode",
+    "FedAvg", "FedProx", "LED", "FiveGCS",
+    "SpaceRunner", "RoundLog", "DeployFedLT", "DeployState",
+]

@@ -1,0 +1,233 @@
+"""State-of-the-art baselines the paper compares against (Table 2).
+
+All four are "space-ified" exactly as the paper describes: the active set
+S_k comes from the orbit scheduler (or Bernoulli sampling), and both links
+are wrapped in the *algorithm-agnostic* EF channel of Fig. 3 — which is the
+point the paper makes: the EF scheme plugs into any federated method.
+
+  * FedAvg   (McMahan et al., 2017)  — local SGD/GD + model averaging
+  * FedProx  (Li et al., 2020b)      — FedAvg + proximal term μ
+  * LED      (Alghunaim, 2024)       — local exact-diffusion, star-adapted
+  * 5GCS     (Grudzień et al., 2023) — prox-point local training with
+                                       client sampling + control variates
+
+Shared state layout (leading agent axis N where noted):
+    x      (N, …)  last local model per agent (used by the e_k metric)
+    m_hat  (N, …)  coordinator's last-received uplink wire per agent
+    c_up   (N, …)  per-agent uplink EF cache
+    c_down (…)     coordinator downlink EF cache
+    extra  (algorithm-specific: ψ_prev for LED, h for 5GCS)
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .error_feedback import EFChannel
+from .pytree import (tree_map, tree_mean_axis0, tree_where_mask,
+                     tree_zeros_like)
+from ..optim.solvers import local_gd
+
+
+class FedState(NamedTuple):
+    x: object
+    m_hat: object
+    c_up: object
+    c_down: object
+    extra: object
+    k: jnp.ndarray
+
+
+def _replicate(x0, n):
+    return tree_map(lambda a: jnp.broadcast_to(a[None], (n,) + a.shape).copy(), x0)
+
+
+@dataclasses.dataclass(frozen=True)
+class _Base:
+    loss: Callable
+    n_epochs: int = 10
+    gamma: float = 0.1
+    uplink: EFChannel = EFChannel()
+    downlink: EFChannel = EFChannel()
+
+    def _ef_uplink(self, key, msgs, caches, active, m_hat_old):
+        """Vmapped uplink EF over agents; inactive agents keep caches/wires."""
+        n = active.shape[0]
+        keys = jax.random.split(key, n)
+        wire, c_new = jax.vmap(lambda kk, m, c: self.uplink.send(kk, m, c))(
+            keys, msgs, caches)
+        c_up = tree_where_mask(active, c_new, caches)
+        m_hat = tree_where_mask(active, wire, m_hat_old)
+        return m_hat, c_up
+
+    def run(self, state, data, n_rounds: int, key, participation: float = 1.0):
+        n_agents = jax.tree_util.tree_leaves(state.x)[0].shape[0]
+
+        def body(st, kk):
+            k_act, k_round = jax.random.split(kk)
+            if participation < 1.0:
+                active = jax.random.bernoulli(k_act, participation, (n_agents,))
+                active = active.at[0].set(True)
+            else:
+                active = jnp.ones((n_agents,), bool)
+            st, info = self.round(st, data, active, k_round)
+            return st, info
+
+        keys = jax.random.split(key, n_rounds)
+        return jax.lax.scan(body, state, keys)
+
+
+@dataclasses.dataclass(frozen=True)
+class FedAvg(_Base):
+    """Uplink message = local model; coordinator averages received models."""
+
+    prox_mu: float = 0.0  # >0 → FedProx
+
+    def init(self, x0, n_agents: int) -> FedState:
+        xN = _replicate(x0, n_agents)
+        return FedState(x=xN, m_hat=xN, c_up=tree_zeros_like(xN),
+                        c_down=tree_zeros_like(x0), extra=(),
+                        k=jnp.zeros((), jnp.int32))
+
+    def round(self, state: FedState, data, active, key) -> Tuple[FedState, dict]:
+        k_down, k_up = jax.random.split(key)
+        # coordinator: average last-received models, downlink with EF
+        y = tree_mean_axis0(state.m_hat)
+        y_wire, c_down = self.downlink.send(k_down, y, state.c_down)
+
+        grad_fn = jax.grad(self.loss)
+
+        def local(x_i, data_i):
+            start = y_wire
+            if self.prox_mu > 0.0:
+                return local_gd(grad_fn, start, data_i, n_epochs=self.n_epochs,
+                                gamma=self.gamma, prox_center=y_wire,
+                                prox_mu=self.prox_mu)
+            return local_gd(grad_fn, start, data_i, n_epochs=self.n_epochs,
+                            gamma=self.gamma)
+
+        x_new = jax.vmap(local)(state.x, data)
+        x = tree_where_mask(active, x_new, state.x)
+        m_hat, c_up = self._ef_uplink(k_up, x, state.c_up, active, state.m_hat)
+        return FedState(x, m_hat, c_up, c_down, (), state.k + 1), {}
+
+
+def FedProx(loss, *, n_epochs=10, gamma=0.1, prox_mu=0.1,
+            uplink=EFChannel(), downlink=EFChannel()) -> FedAvg:
+    return FedAvg(loss=loss, n_epochs=n_epochs, gamma=gamma, prox_mu=prox_mu,
+                  uplink=uplink, downlink=downlink)
+
+
+@dataclasses.dataclass(frozen=True)
+class LED(_Base):
+    """Local Exact-Diffusion (Alghunaim, 2024), star-topology adaptation.
+
+    Exact diffusion in adapt–correct–combine form, with the star graph
+    realized as lazy full averaging  W̄ = (I + 11ᵀ/N)/2  (the coordinator
+    broadcasts the mean, each agent mixes it with its own φ_i):
+
+        ψ_i⁺ = LocalGD(x_i, N_e, γ)                    (adapt, local steps)
+        φ_i⁺ = ψ_i⁺ + x_i − ψ_i                        (correction)
+        x_i⁺ = (φ_i⁺ + mean_j φ_j⁺)/2                  (combine)
+
+    Initialization ψ_i⁰ = x_i⁰ carries the implicit dual; exactness holds at
+    full participation (verified in tests).  Uplink message = φ_i.
+    """
+
+    def init(self, x0, n_agents: int) -> FedState:
+        xN = _replicate(x0, n_agents)
+        return FedState(x=xN, m_hat=xN, c_up=tree_zeros_like(xN),
+                        c_down=tree_zeros_like(x0), extra=xN,  # ψ_prev
+                        k=jnp.zeros((), jnp.int32))
+
+    def round(self, state: FedState, data, active, key) -> Tuple[FedState, dict]:
+        k_down, k_up = jax.random.split(key)
+        grad_fn = jax.grad(self.loss)
+        psi_prev = state.extra
+
+        # adapt + correct (active agents)
+        def local(x_i, psi_prev_i, data_i):
+            psi = local_gd(grad_fn, x_i, data_i, n_epochs=self.n_epochs,
+                           gamma=self.gamma)
+            phi = tree_map(lambda p, xl, pp: p + xl - pp, psi, x_i, psi_prev_i)
+            return psi, phi
+
+        psi_new, phi = jax.vmap(local)(state.x, psi_prev, data)
+        psi = tree_where_mask(active, psi_new, psi_prev)
+
+        # uplink φ_i, coordinator aggregates THIS round's wires, downlink
+        m_hat, c_up = self._ef_uplink(k_up, phi, state.c_up, active, state.m_hat)
+        y = tree_mean_axis0(m_hat)
+        y_wire, c_down = self.downlink.send(k_down, y, state.c_down)
+
+        # combine (lazy star mixing) — active agents only
+        x_new = tree_map(lambda ph, yb: 0.5 * (ph + yb[None]), phi, y_wire)
+        x = tree_where_mask(active, x_new, state.x)
+        return FedState(x, m_hat, c_up, c_down, psi, state.k + 1), {}
+
+
+@dataclasses.dataclass(frozen=True)
+class FiveGCS(_Base):
+    """5GCS (Grudzień, Malinovsky, Richtárik 2023), simplified.
+
+    Sampled clients approximately solve the prox subproblem
+        w_i ≈ argmin_w f_i(w) + ‖w − (y + γ_p·h_i)‖²/(2·γ_p)
+    with N_e local GD steps; control variates h_i ← h_i + (y − w_i)/γ_p;
+    server moves toward the average of the received prox points.
+    """
+
+    gamma_p: float = 1.0     # prox radius γ_p
+    server_lr: float = 1.0   # η: y ← y + η·mean_active(ŵ_i − y)
+
+    def init(self, x0, n_agents: int) -> FedState:
+        xN = _replicate(x0, n_agents)
+        return FedState(x=xN, m_hat=xN, c_up=tree_zeros_like(xN),
+                        c_down=tree_zeros_like(x0),
+                        extra=(tree_zeros_like(xN),),  # h_i
+                        k=jnp.zeros((), jnp.int32))
+
+    def round(self, state: FedState, data, active, key) -> Tuple[FedState, dict]:
+        k_down, k_up = jax.random.split(key)
+        y = tree_mean_axis0(state.m_hat)
+        y_wire, c_down = self.downlink.send(k_down, y, state.c_down)
+
+        grad_fn = jax.grad(self.loss)
+        (h,) = state.extra
+        inv_gp = 1.0 / self.gamma_p
+
+        def local(h_i, data_i):
+            center = tree_map(lambda yb, hh: yb + self.gamma_p * hh, y_wire, h_i)
+
+            def prox_grad(w, d):
+                g = grad_fn(w, d)
+                return tree_map(lambda gl, wl, cl: gl + inv_gp * (wl - cl),
+                                g, w, center)
+
+            return local_gd(prox_grad, y_wire, data_i, n_epochs=self.n_epochs,
+                            gamma=self.gamma)
+
+        w_new = jax.vmap(local)(h, data)
+        x = tree_where_mask(active, w_new, state.x)
+
+        # Σ h_i-conserving control-variate update: the anchor is the mean of
+        # the prox points over the active set (piggy-backed on the downlink
+        # in a physical deployment): h_i ← h_i + (w̄_S − w_i)/γ_p for i∈S.
+        n_act = jnp.maximum(jnp.sum(active), 1)
+
+        def masked_mean(leaf):
+            m = active.reshape((-1,) + (1,) * (leaf.ndim - 1))
+            return jnp.sum(jnp.where(m, leaf, 0), axis=0) / n_act
+
+        w_bar = tree_map(masked_mean, w_new)
+        h_new = tree_map(lambda hh, wb, wl: hh + inv_gp * (wb[None] - wl),
+                         h, w_bar, w_new)
+        h = tree_where_mask(active, h_new, h)
+
+        # server target: y + η·(mean of received w − y); transmitted as the
+        # uplink message so the coordinator can aggregate wires directly.
+        msg = tree_map(lambda yb, wl: yb + self.server_lr * (wl - yb), y_wire, w_new)
+        m_hat, c_up = self._ef_uplink(k_up, msg, state.c_up, active, state.m_hat)
+        return FedState(x, m_hat, c_up, c_down, (h,), state.k + 1), {}

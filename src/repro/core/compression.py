@@ -1,0 +1,188 @@
+"""δ-approximate compressors (paper §2.4, Definitions 1–3).
+
+A compressor is a callable ``C(key, tree) -> tree`` mapping a pytree to a
+pytree of the same structure/shapes.  ``key`` is a PRNG key consumed only by
+stochastic compressors (rand-d); deterministic ones ignore it.
+
+Implemented:
+  * :class:`UniformQuantizer` — paper Definition 2 (component-wise uniform
+    quantization with L levels over [V_min, V_max]).
+  * :class:`RandD` — paper Definition 3 (keep exactly d coordinates chosen
+    uniformly at random, zero the rest).
+  * :class:`TopK` — keep the k largest-magnitude coordinates (classic
+    δ-approximate contraction with δ = k/n).
+  * :class:`ScaledSign` — ‖x‖₁/n · sign(x) (Karimireddy et al., 2019).
+  * :class:`Identity` — no compression (δ = 1).
+
+For the deploy path (real wire-bytes savings across the slow inter-pod
+link), :func:`quantize_encode` / :func:`quantize_decode` provide the integer
+on-wire codec matching :class:`UniformQuantizer`.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from .pytree import tree_map, tree_split_keys
+
+
+class Compressor:
+    """Base class; subclasses implement :meth:`compress_leaf`."""
+
+    #: True if the compressor consumes PRNG randomness.
+    stochastic: bool = False
+
+    def compress_leaf(self, key, x):  # pragma: no cover - abstract
+        raise NotImplementedError
+
+    def __call__(self, key, tree):
+        if self.stochastic:
+            keys = tree_split_keys(key, tree)
+            return tree_map(lambda k, x: self.compress_leaf(k, x), keys, tree)
+        return tree_map(lambda x: self.compress_leaf(None, x), tree)
+
+    def wire_bits_per_scalar(self) -> float:
+        """Nominal on-wire cost (bits per tensor element) of this compressor.
+
+        Used by the constellation link model to convert messages to
+        transmission times.
+        """
+        return 32.0
+
+
+@dataclasses.dataclass(frozen=True)
+class Identity(Compressor):
+    def compress_leaf(self, key, x):
+        return x
+
+    def wire_bits_per_scalar(self) -> float:
+        return 32.0
+
+
+@dataclasses.dataclass(frozen=True)
+class UniformQuantizer(Compressor):
+    """Paper Definition 2.
+
+    q(x) = Δ · floor((x − V_min)/Δ + 0.5) + V_min,  Δ = (V_max − V_min)/L.
+
+    ``clip`` optionally clamps inputs into [V_min, V_max] first; the paper's
+    definition does not clip (values far outside the range quantize onto the
+    extrapolated lattice), so ``clip`` defaults to False for faithfulness.
+    """
+
+    levels: int = 1000
+    vmin: float = -10.0
+    vmax: float = 10.0
+    clip: bool = False
+
+    def compress_leaf(self, key, x):
+        delta = (self.vmax - self.vmin) / self.levels
+        xx = jnp.clip(x, self.vmin, self.vmax) if self.clip else x
+        q = delta * jnp.floor((xx - self.vmin) / delta + 0.5) + self.vmin
+        return q.astype(x.dtype)
+
+    def wire_bits_per_scalar(self) -> float:
+        # level indices need ceil(log2(L+1)) bits (+ negligible scale scalars)
+        return float(max(1, int(jnp.ceil(jnp.log2(self.levels + 1)))))
+
+
+@dataclasses.dataclass(frozen=True)
+class RandD(Compressor):
+    """Paper Definition 3: keep exactly d coordinates, uniformly at random.
+
+    ``fraction`` gives d = round(fraction · n) per leaf (the paper uses
+    d = 0.8n and d = 0.2n).
+    """
+
+    fraction: float = 0.5
+    stochastic: bool = True
+
+    def compress_leaf(self, key, x):
+        n = x.size
+        d = max(1, int(round(self.fraction * n)))
+        # exactly-d mask: rank i.i.d. uniforms, keep the d smallest.
+        u = jax.random.uniform(key, (n,))
+        # threshold = d-th smallest value
+        kth = jnp.sort(u)[d - 1]
+        mask = (u <= kth).reshape(x.shape)
+        return jnp.where(mask, x, 0).astype(x.dtype)
+
+    def wire_bits_per_scalar(self) -> float:
+        # values (32b) + indices (~32b) for the kept fraction
+        return 64.0 * self.fraction
+
+
+@dataclasses.dataclass(frozen=True)
+class TopK(Compressor):
+    """Keep the k = round(fraction·n) largest-|x| coordinates per leaf."""
+
+    fraction: float = 0.1
+
+    def compress_leaf(self, key, x):
+        n = x.size
+        k = max(1, int(round(self.fraction * n)))
+        flat = x.reshape(-1)
+        mag = jnp.abs(flat)
+        kth = jnp.sort(mag)[n - k]
+        mask = mag >= kth
+        return jnp.where(mask.reshape(x.shape), x, 0).astype(x.dtype)
+
+    def wire_bits_per_scalar(self) -> float:
+        return 64.0 * self.fraction
+
+
+@dataclasses.dataclass(frozen=True)
+class ScaledSign(Compressor):
+    """C(x) = (‖x‖₁/n)·sign(x) — 1 bit/coordinate + one scale."""
+
+    def compress_leaf(self, key, x):
+        scale = jnp.mean(jnp.abs(x))
+        return (scale * jnp.sign(x)).astype(x.dtype)
+
+    def wire_bits_per_scalar(self) -> float:
+        return 1.0
+
+
+# ---------------------------------------------------------------------------
+# On-wire integer codec for the deploy path.
+# ---------------------------------------------------------------------------
+
+def _int_dtype(levels: int):
+    if levels <= 255:
+        return jnp.uint8
+    if levels <= 65535:
+        return jnp.uint16
+    return jnp.uint32
+
+
+def quantize_encode(x, levels: int, vmin: float, vmax: float):
+    """Encode to integer level indices (the bytes that cross the slow link).
+
+    Returns the integer tensor; decode with :func:`quantize_decode`. Matches
+    :class:`UniformQuantizer` with clip=True (on-wire encodings must clamp:
+    an index outside [0, L] is not representable).
+    """
+    delta = (vmax - vmin) / levels
+    idx = jnp.floor((jnp.clip(x, vmin, vmax) - vmin) / delta + 0.5)
+    return jnp.clip(idx, 0, levels).astype(_int_dtype(levels))
+
+
+def quantize_decode(idx, levels: int, vmin: float, vmax: float, dtype=jnp.float32):
+    delta = (vmax - vmin) / levels
+    return (idx.astype(dtype) * delta + vmin).astype(dtype)
+
+
+def make_compressor(name: str, **kw) -> Compressor:
+    table = {
+        "identity": Identity,
+        "quant": UniformQuantizer,
+        "rand_d": RandD,
+        "top_k": TopK,
+        "sign": ScaledSign,
+    }
+    if name not in table:
+        raise ValueError(f"unknown compressor {name!r}; options: {sorted(table)}")
+    return table[name](**kw)

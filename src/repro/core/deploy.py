@@ -1,0 +1,139 @@
+"""Deploy mode: one federated round as a single mesh-sharded ``train_step``.
+
+This is the production path the multi-pod dry-run lowers.  Mapping (see
+DESIGN.md §3): agents are mesh slices (pods for the big archs, data-axis
+slices for the small ones); every per-agent state leaf carries a leading
+agent dim A; local training is ``vmap``-ed over it.  The paper's Algorithm 2
+runs inside the step:
+
+  1. v = 2·ŷ − z;  N_e prox-gradient epochs on the LM loss   (local training)
+  2. z ← z + 2(x − ŷ)
+  3. uplink: wire = Q(z + c_up) as *integer* level indices — the cross-agent
+     all-gather moves int8/int16, which is the actual wire saving of the
+     paper's compression, visible in the dry-run HLO     (uplink EF)
+  4. ȳ = mean_A decode(wire);  y = c_down + ȳ
+  5. ŷ = decode(Q(y));  c_down = y − ŷ                      (downlink EF)
+
+Partial participation is a host-side decision (the orbit scheduler picks
+which satellites run a round); within the lowered step all present agents
+participate — exactly how a real constellation executes.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from ..core.compression import quantize_decode, quantize_encode
+from ..core.pytree import tree_map
+from ..models.transformer import init_params, lm_loss
+
+
+class DeployState(NamedTuple):
+    x: object        # (A, …) per-agent models
+    z: object        # (A, …) auxiliaries
+    c_up: object     # (A, …) uplink EF caches
+    y_hat: object    # (…)    last broadcast ŷ (replicated coordinator output)
+    c_down: object   # (…)    downlink EF cache
+    k: jnp.ndarray
+
+
+@dataclasses.dataclass(frozen=True)
+class DeployFedLT:
+    """Fed-LT round on the mesh. cfg: ModelConfig; quantization is the
+    paper's uniform quantizer with static [vmin, vmax] (wire = level ints)."""
+
+    cfg: object
+    n_epochs: int = 2
+    gamma: float = 0.02
+    rho: float = 10.0
+    # wire format: uint8 level indices over a range that must cover the z
+    # dynamics (out-of-range values clip, and the EF cache then grows until
+    # they re-enter range — pick the range generously, EF absorbs coarse Δ)
+    levels: int = 255          # → uint8 wire
+    vmin: float = -1.0
+    vmax: float = 1.0
+    compress: bool = True
+    backend: str = "chunked"
+
+    # -- state ------------------------------------------------------------
+    def init(self, key, n_agents: int) -> DeployState:
+        p0 = init_params(key, self.cfg)
+        stack = lambda t: tree_map(
+            lambda a: jnp.broadcast_to(a[None], (n_agents,) + a.shape).copy(), t)
+        zeros = lambda t: tree_map(jnp.zeros_like, t)
+        xa = stack(p0)
+        return DeployState(x=xa, z=xa, c_up=zeros(xa), y_hat=p0,
+                           c_down=zeros(p0), k=jnp.zeros((), jnp.int32))
+
+    # -- one round ----------------------------------------------------------
+    def round_step(self, state: DeployState, batch, agent_replicate_spec=None):
+        """batch: pytree with leading agent dim A on every leaf."""
+        cfg = self.cfg
+        inv_rho = 1.0 / self.rho
+
+        def local_train(x_i, v_i, batch_i):
+            def epoch(w, _):
+                loss, g = jax.value_and_grad(
+                    lambda q: lm_loss(q, cfg, batch_i, backend=self.backend))(w)
+                w = tree_map(
+                    lambda wl, gl, vl: (wl - self.gamma *
+                                        (gl + inv_rho * (wl - vl)).astype(wl.dtype)),
+                    w, g, v_i)
+                return w, loss
+
+            if getattr(self.cfg, "scan_unroll", False):
+                # dry-run costing: python loop so the epoch backward is
+                # unrolled too (scan transposes are loops XLA counts once)
+                w, loss = x_i, jnp.zeros((), jnp.float32)
+                for _ in range(self.n_epochs):
+                    w, loss = epoch(w, None)
+                return w, loss
+            w, losses = jax.lax.scan(epoch, x_i, None, length=self.n_epochs)
+            return w, losses[-1]
+
+        v = tree_map(lambda y, z: (2.0 * y - z).astype(z.dtype),
+                     state.y_hat, state.z)
+        x_new, last_loss = jax.vmap(local_train)(state.x, v, batch)
+        z_new = tree_map(lambda z, xn, y: z + 2.0 * (xn - y),
+                         state.z, x_new, state.y_hat)
+
+        # ---- uplink: quantize + EF; integer tensor crosses the slow link --
+        if self.compress:
+            msg = tree_map(jnp.add, z_new, state.c_up)
+            wire = tree_map(
+                lambda m: quantize_encode(m, self.levels, self.vmin, self.vmax), msg)
+            decoded = tree_map(
+                lambda w, m: quantize_decode(w, self.levels, self.vmin,
+                                             self.vmax, m.dtype), wire, msg)
+            c_up_new = tree_map(jnp.subtract, msg, decoded)
+            # replicate the agent dim of the INT tensor (all-gather of int8)
+            if agent_replicate_spec is not None:
+                wire = jax.lax.with_sharding_constraint(wire, agent_replicate_spec)
+            gathered = tree_map(
+                lambda w, m: quantize_decode(w, self.levels, self.vmin,
+                                             self.vmax, m.dtype), wire, msg)
+            z_bar = tree_map(lambda g: jnp.mean(g, axis=0), gathered)
+        else:
+            c_up_new = state.c_up
+            z_bar = tree_map(lambda z: jnp.mean(z, axis=0), z_new)
+
+        # ---- coordinator aggregate + downlink EF --------------------------
+        y = tree_map(lambda c, zb: c + zb.astype(c.dtype), state.c_down, z_bar)
+        if self.compress:
+            y_int = tree_map(
+                lambda m: quantize_encode(m, self.levels, self.vmin, self.vmax), y)
+            y_hat = tree_map(
+                lambda w, m: quantize_decode(w, self.levels, self.vmin,
+                                             self.vmax, m.dtype), y_int, y)
+            c_down_new = tree_map(jnp.subtract, y, y_hat)
+        else:
+            y_hat, c_down_new = y, state.c_down
+
+        new_state = DeployState(x=x_new, z=z_new, c_up=c_up_new, y_hat=y_hat,
+                                c_down=c_down_new, k=state.k + 1)
+        metrics = {"loss": jnp.mean(last_loss)}
+        return new_state, metrics

@@ -1,0 +1,52 @@
+"""Algorithm-agnostic error feedback (paper Fig. 3).
+
+The paper's byproduct contribution: a *channel* that can wrap the uplink or
+downlink of ANY federated algorithm.  Every transmission through the channel
+adds the locally cached compression error to the message, compresses, caches
+the new error, and puts the compressed message on the wire:
+
+    wire      = C(msg + cache)
+    new_cache = msg + cache − wire
+
+With a δ-approximate compressor the cache stays bounded, and the telescoping
+sum of wires equals the sum of messages minus the final cache — i.e. all
+information is ultimately transmitted (paper §2.2).
+
+:class:`EFChannel` carries no state itself; the cache pytree is threaded
+explicitly so the channel composes with jit/vmap/scan.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import jax.numpy as jnp
+
+from .compression import Compressor, Identity
+from .pytree import tree_add, tree_sub, tree_zeros_like
+
+
+@dataclasses.dataclass(frozen=True)
+class EFChannel:
+    """One direction of communication (uplink or downlink) with EF.
+
+    ``enabled=False`` degrades to plain compression (Algorithm 1) while
+    keeping the same state signature, so Algorithms 1 and 2 are the same
+    code path with a flag — exactly the paper's ablation in Table 1.
+    """
+
+    compressor: Compressor = Identity()
+    enabled: bool = True
+
+    def init_cache(self, msg_like):
+        return tree_zeros_like(msg_like)
+
+    def send(self, key, msg, cache) -> Tuple[object, object]:
+        """Returns (wire, new_cache)."""
+        if not self.enabled:
+            wire = self.compressor(key, msg)
+            return wire, cache
+        corrected = tree_add(msg, cache)
+        wire = self.compressor(key, corrected)
+        new_cache = tree_sub(corrected, wire)
+        return wire, new_cache

@@ -1,0 +1,134 @@
+"""Fed-LT with bi-directional compression and error feedback.
+
+Simulate mode: Algorithms 1 and 2 of the paper, with all N agents vmapped
+over a leading agent axis.  Algorithm 1 (compression, no EF) and Algorithm 2
+(compression + EF) are the same code path — pass ``EFChannel(C, enabled=False)``
+for Algorithm 1, exactly mirroring the paper's Table-1 ablation.
+
+State layout (leaves carry a leading agent axis N where noted):
+
+    x      (N, …)  per-agent models x_i
+    z      (N, …)  per-agent auxiliaries z_i
+    c_up   (N, …)  per-agent uplink EF caches c_i
+    z_hat  (N, …)  coordinator's last-received uplink wire per agent
+                   (what the paper calls z_{i,k−1} for inactive agents —
+                   the coordinator can only know what was transmitted)
+    c_down (…)     coordinator downlink EF cache c
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .error_feedback import EFChannel
+from .pytree import (tree_add, tree_map, tree_mean_axis0, tree_scale, tree_sub,
+                     tree_where_mask, tree_zeros_like)
+from ..optim.solvers import local_prox_gd
+
+
+class FedLTState(NamedTuple):
+    x: object
+    z: object
+    c_up: object
+    z_hat: object
+    c_down: object
+    k: jnp.ndarray
+
+
+@dataclasses.dataclass(frozen=True)
+class FedLT:
+    """Algorithm 2 (paper). loss(params, agent_data) -> scalar.
+
+    ``n_epochs`` = N_e, ``gamma`` = local step γ, ``rho`` = ρ.
+    """
+
+    loss: Callable
+    n_epochs: int = 10
+    gamma: float = 0.1
+    rho: float = 1.0
+    uplink: EFChannel = EFChannel()
+    downlink: EFChannel = EFChannel()
+
+    # -- setup ------------------------------------------------------------
+    def init(self, x0, n_agents: int) -> FedLTState:
+        """x0: single-model pytree (no agent axis); replicated to all agents."""
+        xN = tree_map(lambda a: jnp.broadcast_to(a[None], (n_agents,) + a.shape).copy(), x0)
+        return FedLTState(
+            x=xN,
+            z=xN,
+            c_up=tree_zeros_like(xN),
+            z_hat=xN,
+            c_down=tree_zeros_like(x0),
+            k=jnp.zeros((), jnp.int32),
+        )
+
+    # -- one communication round ------------------------------------------
+    def round(self, state: FedLTState, data, active, key) -> Tuple[FedLTState, dict]:
+        """One iteration of the outer loop.
+
+        data:   pytree with leading agent axis N on every leaf.
+        active: bool (N,) — the set S_{k+1} (from Bernoulli sampling or the
+                orbit scheduler).
+        """
+        k_down, k_up = jax.random.split(key)
+
+        # ---- coordinator: aggregate + downlink EF (paper lines 3-5) ----
+        y_mean = tree_mean_axis0(state.z_hat)
+        y_wire, c_down_new = self.downlink.send(k_down, y_mean, state.c_down)
+
+        # ---- agents: local training (paper lines 8-14), vmapped ----
+        grad_fn = jax.grad(self.loss)
+
+        def agent_update(x_i, z_i, data_i):
+            v_i = tree_map(lambda y, z: 2.0 * y - z, y_wire, z_i)
+            w = local_prox_gd(grad_fn, x_i, v_i, data_i,
+                              n_epochs=self.n_epochs, gamma=self.gamma, rho=self.rho)
+            z_new = tree_map(lambda z, xn, y: z + 2.0 * (xn - y), z_i, w, y_wire)
+            return w, z_new
+
+        x_new, z_new = jax.vmap(agent_update)(state.x, state.z, data)
+
+        # partial participation: inactive agents keep x, z (paper line 18)
+        x_next = tree_where_mask(active, x_new, state.x)
+        z_next = tree_where_mask(active, z_new, state.z)
+
+        # ---- uplink EF + transmit (paper lines 15-16), per agent ----
+        n_agents = active.shape[0]
+        up_keys = jax.random.split(k_up, n_agents)
+        wire, c_up_new = jax.vmap(lambda kk, m, c: self.uplink.send(kk, m, c))(
+            up_keys, z_next, state.c_up)
+        c_up_next = tree_where_mask(active, c_up_new, state.c_up)
+        z_hat_next = tree_where_mask(active, wire, state.z_hat)
+
+        new_state = FedLTState(x=x_next, z=z_next, c_up=c_up_next,
+                               z_hat=z_hat_next, c_down=c_down_new,
+                               k=state.k + 1)
+        info = {"n_active": jnp.sum(active)}
+        return new_state, info
+
+    def run(self, state: FedLTState, data, n_rounds: int, key,
+            participation: float = 1.0):
+        """Convenience driver: Bernoulli(p) participation, jitted scan."""
+        n_agents = jax.tree_util.tree_leaves(state.x)[0].shape[0]
+
+        def body(st, kk):
+            k_act, k_round = jax.random.split(kk)
+            active = jax.random.bernoulli(k_act, participation, (n_agents,))
+            # guarantee at least one active agent (paper assumes p_i > 0)
+            active = active.at[0].set(True) if participation < 1.0 else jnp.ones(
+                (n_agents,), bool)
+            st, info = self.round(st, data, active, k_round)
+            return st, info
+
+        keys = jax.random.split(key, n_rounds)
+        return jax.lax.scan(body, state, keys)
+
+
+def optimality_error(x_agents, x_star):
+    """Paper §3 metric: e_k = Σ_i ‖x_{i,k} − x̄‖²."""
+    diffs = tree_map(lambda xa, xs: xa - xs[None], x_agents,
+                     x_star)
+    return sum(jnp.sum(d * d) for d in jax.tree_util.tree_leaves(diffs))

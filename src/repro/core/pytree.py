@@ -1,0 +1,93 @@
+"""Pytree arithmetic helpers used throughout the federated core.
+
+All federated state (models x_i, auxiliaries z_i, EF caches c_i, the
+coordinator aggregate y) are arbitrary pytrees of jnp arrays; in simulate
+mode per-agent quantities carry an extra leading agent axis.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+Tree = object  # any pytree of jnp arrays
+
+
+def tree_map(f, *trees):
+    return jax.tree_util.tree_map(f, *trees)
+
+
+def tree_add(a, b):
+    return tree_map(jnp.add, a, b)
+
+
+def tree_sub(a, b):
+    return tree_map(jnp.subtract, a, b)
+
+
+def tree_scale(s, a):
+    return tree_map(lambda x: s * x, a)
+
+
+def tree_axpy(s, a, b):
+    """s * a + b."""
+    return tree_map(lambda x, y: s * x + y, a, b)
+
+
+def tree_zeros_like(a):
+    return tree_map(jnp.zeros_like, a)
+
+
+def tree_vdot(a, b):
+    leaves = jax.tree_util.tree_leaves(tree_map(lambda x, y: jnp.vdot(x, y), a, b))
+    return sum(leaves)
+
+
+def tree_sq_norm(a):
+    return tree_vdot(a, a)
+
+
+def tree_norm(a):
+    return jnp.sqrt(tree_sq_norm(a))
+
+
+def tree_mean_axis0(a):
+    """Mean over the leading (agent) axis of every leaf."""
+    return tree_map(lambda x: jnp.mean(x, axis=0), a)
+
+
+def tree_sum_axis0(a):
+    return tree_map(lambda x: jnp.sum(x, axis=0), a)
+
+
+def tree_where_mask(mask, a, b):
+    """Select per-agent: leaves of a/b have leading agent axis; mask (N,)."""
+
+    def sel(x, y):
+        m = mask.reshape((-1,) + (1,) * (x.ndim - 1))
+        return jnp.where(m, x, y)
+
+    return tree_map(sel, a, b)
+
+
+def tree_broadcast_agents(a, n_agents):
+    """Tile a coordinator tree to a per-agent stacked tree."""
+    return tree_map(lambda x: jnp.broadcast_to(x[None], (n_agents,) + x.shape), a)
+
+
+def tree_size(a):
+    return sum(x.size for x in jax.tree_util.tree_leaves(a))
+
+
+def tree_bytes(a):
+    return sum(x.size * x.dtype.itemsize for x in jax.tree_util.tree_leaves(a))
+
+
+def tree_cast(a, dtype):
+    return tree_map(lambda x: x.astype(dtype), a)
+
+
+def tree_split_keys(key, tree):
+    """One PRNG key per leaf, returned as a matching pytree."""
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    keys = jax.random.split(key, len(leaves))
+    return jax.tree_util.tree_unflatten(treedef, list(keys))

@@ -1,0 +1,85 @@
+"""Synthetic data pipeline for the LM architectures.
+
+Deterministic per-agent token streams (seeded by agent id + step) so the
+federated simulation is reproducible and shardable.  The "task" is a learnable
+synthetic language: tokens follow a random order-2 Markov chain per agent
+(heterogeneous across agents — exactly the federated setting), so models can
+actually reduce loss and training curves are meaningful.
+
+For VLM/audio stubs, :func:`make_batch` also emits the precomputed
+frame/patch embeddings (the modality frontend carve-out in the brief).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..models.config import ModelConfig
+
+
+def markov_tokens(key, batch: int, seq: int, vocab: int, order_states: int = 64):
+    """Sample from a random sparse transition table (shared per key)."""
+    k_tab, k_init, k_samp = jax.random.split(key, 3)
+    v_eff = min(vocab, 4096)  # transition table over a clamped vocab
+    table = jax.random.dirichlet(k_tab, jnp.ones((v_eff,)) * 0.05,
+                                 shape=(order_states,))
+    state0 = jax.random.randint(k_init, (batch,), 0, order_states)
+
+    def step(state, k):
+        probs = table[state]                         # (B, v_eff)
+        tok = jax.random.categorical(k, jnp.log(probs + 1e-9), axis=-1)
+        new_state = (state * 31 + tok) % order_states
+        return new_state, tok
+
+    keys = jax.random.split(k_samp, seq)
+    _, toks = jax.lax.scan(step, state0, keys)
+    return jnp.transpose(toks).astype(jnp.int32)     # (B, S)
+
+
+def make_batch(cfg: ModelConfig, key, batch: int, seq: int,
+               vision_frac: float = 0.25):
+    """Training batch for one agent. Returns the dict `forward` expects."""
+    if cfg.arch_type == "vlm":
+        s_vis = int(seq * vision_frac)
+        s_txt = seq - s_vis
+        k1, k2 = jax.random.split(key)
+        tokens = markov_tokens(k1, batch, s_txt, cfg.vocab_size)
+        vis = jax.random.normal(k2, (batch, s_vis, cfg.d_model),
+                                jnp.dtype(cfg.dtype)) * 0.02
+        labels = jnp.concatenate(
+            [jnp.full((batch, s_vis), -1, jnp.int32), tokens], axis=1)
+        pos3 = _mrope_positions(batch, s_vis, s_txt)
+        return {"tokens": tokens, "extra_embeds": vis, "labels": labels,
+                "positions": pos3}
+    if cfg.arch_type == "audio":
+        tokens = markov_tokens(key, batch, seq, cfg.vocab_size)
+        return {"tokens": tokens, "labels": tokens}
+    tokens = markov_tokens(key, batch, seq, cfg.vocab_size)
+    return {"tokens": tokens, "labels": tokens}
+
+
+def _mrope_positions(batch: int, s_vis: int, s_txt: int):
+    """Temporal/height/width position streams: a √s_vis×√s_vis image grid
+    followed by linear text positions (Qwen2-VL convention, simplified)."""
+    side = max(1, int(s_vis ** 0.5))
+    idx = jnp.arange(s_vis)
+    h = jnp.minimum(idx // side, side - 1)
+    w = idx % side
+    t_vis = jnp.zeros((s_vis,), jnp.int32)
+    t_txt = side + jnp.arange(s_txt)
+    pos_t = jnp.concatenate([t_vis, t_txt])
+    pos_h = jnp.concatenate([h, t_txt])
+    pos_w = jnp.concatenate([w, t_txt])
+    pos3 = jnp.stack([pos_t, pos_h, pos_w]).astype(jnp.int32)
+    return jnp.broadcast_to(pos3[:, None], (3, batch, s_vis + s_txt))
+
+
+def agent_batches(cfg: ModelConfig, n_agents: int, batch_per_agent: int,
+                  seq: int, round_idx: int, seed: int = 0):
+    """Per-agent stacked batch pytree (leading agent axis)."""
+    keys = jax.vmap(lambda i: jax.random.fold_in(
+        jax.random.fold_in(jax.random.PRNGKey(seed), i), round_idx))(
+        jnp.arange(n_agents))
+    return jax.vmap(lambda k: make_batch(cfg, k, batch_per_agent, seq))(keys)

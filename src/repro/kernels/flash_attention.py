@@ -1,0 +1,135 @@
+"""Blocked flash-attention Pallas TPU kernel (causal + sliding window).
+
+TPU adaptation of the prefill hot spot: Q/K/V tiles live in VMEM, the score
+block (BLOCK_Q × BLOCK_K) stays on-chip, and the running max/denominator
+(online softmax) are carried across the KV-block loop, so HBM traffic is
+O(S·D) instead of O(S²).  Block shapes are MXU-aligned (multiples of 128 on
+the contraction/lane dims).  Sliding-window layers visit only the in-window
+band of KV blocks via the grid's kv range, the same banding the pure-JAX
+chunked path uses.
+
+Grid: (batch·heads, n_q_blocks, n_kv_blocks), kv innermost so the
+accumulators in VMEM scratch carry across kv steps.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _attn_kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
+                 scale, block_q, block_k, n_kv, causal, window, softcap,
+                 seq_q, seq_k):
+    qi = pl.program_id(1)
+    kj = pl.program_id(2)
+
+    @pl.when(kj == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q_pos = qi * block_q + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 0)
+    k_pos = kj * block_k + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 1)
+
+    # skip blocks fully outside the causal/window band
+    first_q = qi * block_q
+    last_q = first_q + block_q - 1
+    first_k = kj * block_k
+    run = True
+    if causal:
+        run = jnp.asarray(first_k <= last_q)
+    if window is not None:
+        run = jnp.logical_and(run, jnp.asarray(first_k + block_k
+                                               > first_q - window))
+
+    @pl.when(run)
+    def _body():
+        q = q_ref[0].astype(jnp.float32)
+        k = k_ref[0].astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ()))) * scale
+        if softcap is not None:
+            s = softcap * jnp.tanh(s / softcap)
+        ok = jnp.ones_like(s, dtype=jnp.bool_)
+        if causal:
+            ok &= k_pos <= q_pos
+        if window is not None:
+            ok &= k_pos > q_pos - window
+        ok &= (q_pos < seq_q) & (k_pos < seq_k)   # padding
+        s = jnp.where(ok, s, NEG_INF)
+
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[:, None])
+        corr = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * corr + jnp.sum(p, axis=-1)
+        v = v_ref[0].astype(jnp.float32)
+        acc_ref[...] = (acc_ref[...] * corr[:, None]
+                        + jax.lax.dot(p.astype(v.dtype), v))
+        m_ref[...] = m_new
+
+    @pl.when(kj == n_kv - 1)
+    def _finish():
+        l = l_ref[...]
+        o_ref[0] = (acc_ref[...] / jnp.maximum(l, 1e-30)[:, None]
+                    ).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "softcap",
+                                             "block_q", "block_k", "interpret"))
+def flash_attention(q, k, v, *, causal: bool = True, window=None,
+                    softcap=None, block_q: int = 128, block_k: int = 128,
+                    interpret: bool = True):
+    """q,k,v: (B, S, H, D) with equal H (GQA expansion by the caller).
+    Returns (B, S, H, D)."""
+    b, sq, h, d = q.shape
+    sk = k.shape[1]
+    scale = 1.0 / np.sqrt(d)
+
+    pad_q, pad_k = (-sq) % block_q, (-sk) % block_k
+    if pad_q:
+        q = jnp.pad(q, ((0, 0), (0, pad_q), (0, 0), (0, 0)))
+    if pad_k:
+        k = jnp.pad(k, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
+    sq_p, sk_p = q.shape[1], k.shape[1]
+
+    # (B·H, S, D) layout
+    qt = q.transpose(0, 2, 1, 3).reshape(b * h, sq_p, d)
+    kt = k.transpose(0, 2, 1, 3).reshape(b * h, sk_p, d)
+    vt = v.transpose(0, 2, 1, 3).reshape(b * h, sk_p, d)
+
+    n_q, n_kv = sq_p // block_q, sk_p // block_k
+    grid = (b * h, n_q, n_kv)
+
+    kernel = functools.partial(
+        _attn_kernel, scale=scale, block_q=block_q, block_k=block_k,
+        n_kv=n_kv, causal=causal, window=window, softcap=softcap,
+        seq_q=sq, seq_k=sk)
+
+    out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block_q, d), lambda bh, qi, kj: (bh, qi, 0)),
+            pl.BlockSpec((1, block_k, d), lambda bh, qi, kj: (bh, kj, 0)),
+            pl.BlockSpec((1, block_k, d), lambda bh, qi, kj: (bh, kj, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, d), lambda bh, qi, kj: (bh, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((b * h, sq_p, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, d), jnp.float32),   # acc
+            pltpu.VMEM((block_q,), jnp.float32),     # running max
+            pltpu.VMEM((block_q,), jnp.float32),     # running denom
+        ],
+        interpret=interpret,
+    )(qt, kt, vt)
+    out = out.reshape(b, h, sq_p, d).transpose(0, 2, 1, 3)
+    return out[:, :sq]

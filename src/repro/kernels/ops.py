@@ -1,0 +1,36 @@
+"""jit'd public wrappers around the Pallas kernels.
+
+``use_pallas`` selects the kernel path; interpret mode is chosen
+automatically (CPU → interpret=True for validation, TPU → compiled kernel).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import ref
+from .flash_attention import flash_attention as _flash
+from .quantize_ef import quantize_ef as _quant_ef
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def quantize_ef(msg, cache, *, levels=255, vmin=-0.25, vmax=0.25,
+                use_pallas: bool = True):
+    if not use_pallas:
+        return ref.quantize_ef_ref(msg, cache, levels=levels, vmin=vmin,
+                                   vmax=vmax)
+    return _quant_ef(msg, cache, levels=levels, vmin=vmin, vmax=vmax,
+                     interpret=_interpret())
+
+
+def attention(q, k, v, *, causal=True, window=None, softcap=None,
+              use_pallas: bool = True, block_q: int = 128, block_k: int = 128):
+    """(B,S,H,D) attention; kv heads must be pre-expanded to match q."""
+    if not use_pallas:
+        return ref.flash_attention_ref(q, k, v, causal=causal, window=window,
+                                       softcap=softcap)
+    return _flash(q, k, v, causal=causal, window=window, softcap=softcap,
+                  block_q=block_q, block_k=block_k, interpret=_interpret())

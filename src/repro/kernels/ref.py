@@ -1,0 +1,47 @@
+"""Pure-jnp oracles for the Pallas kernels (allclose targets in tests)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def quantize_ef_ref(msg, cache, *, levels: int, vmin: float, vmax: float):
+    """Fused uplink step (paper Alg. 2 lines 15–16):
+
+        corrected = msg + cache
+        wire      = level_index(clip(corrected))      (uint8/uint16)
+        new_cache = corrected − decode(wire)
+
+    Returns (wire, new_cache).
+    """
+    delta = (vmax - vmin) / levels
+    # accumulate in f32 (matches the kernel: VMEM compute is f32)
+    corrected = msg.astype(jnp.float32) + cache.astype(jnp.float32)
+    idx = jnp.floor((jnp.clip(corrected, vmin, vmax) - vmin) / delta + 0.5)
+    idx = jnp.clip(idx, 0, levels)
+    dtype = jnp.uint8 if levels <= 255 else jnp.uint16
+    decoded = idx * delta + vmin
+    new_cache = (corrected - decoded).astype(msg.dtype)
+    return idx.astype(dtype), new_cache
+
+
+def flash_attention_ref(q, k, v, *, causal: bool = True, window=None,
+                        softcap=None):
+    """q,k,v: (B, S, H, D) (same kv heads — GQA expansion done by caller).
+    Returns (B, S, H, D)."""
+    b, s, h, d = q.shape
+    scale = 1.0 / np.sqrt(d)
+    scores = jnp.einsum("bqhd,bkhd->bhqk", q, k).astype(jnp.float32) * scale
+    if softcap is not None:
+        scores = softcap * jnp.tanh(scores / softcap)
+    q_pos = jnp.arange(s)[:, None]
+    k_pos = jnp.arange(k.shape[1])[None, :]
+    mask = jnp.ones((s, k.shape[1]), bool)
+    if causal:
+        mask &= k_pos <= q_pos
+    if window is not None:
+        mask &= k_pos > q_pos - window
+    scores = jnp.where(mask, scores, -1e30)
+    p = jax.nn.softmax(scores, axis=-1)
+    return jnp.einsum("bhqk,bkhd->bqhd", p.astype(v.dtype), v)

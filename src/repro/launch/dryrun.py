@@ -1,0 +1,331 @@
+import os
+os.environ["XLA_FLAGS"] = os.environ.get(
+    "XLA_FLAGS", "") + " --xla_force_host_platform_device_count=512"
+# ^ MUST precede any jax import: jax locks the device count on first init.
+#   This is dry-run-only; tests/benches see the real single CPU device.
+
+import argparse          # noqa: E402
+import json              # noqa: E402
+import re                # noqa: E402
+import time              # noqa: E402
+from typing import Optional  # noqa: E402
+
+import jax               # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+from jax.sharding import NamedSharding, PartitionSpec as P  # noqa: E402
+
+from ..configs import ARCHS                                  # noqa: E402
+from ..core.deploy import DeployFedLT, DeployState           # noqa: E402
+from ..models.transformer import init_cache, init_params     # noqa: E402
+from .mesh import agent_axes, make_production_mesh, n_agents  # noqa: E402
+from .serve import make_decode_step, make_prefill_step       # noqa: E402
+from .sharding import batch_specs, cache_specs, param_specs  # noqa: E402
+
+SHAPES = {
+    "train_4k":    dict(seq=4096,   batch=256, kind="train"),
+    "prefill_32k": dict(seq=32768,  batch=32,  kind="prefill"),
+    "decode_32k":  dict(seq=32768,  batch=128, kind="decode"),
+    "long_500k":   dict(seq=524288, batch=1,   kind="decode"),
+}
+
+# agent placement per arch (see DESIGN.md §3): big models = one agent per pod
+AGENT_AXIS = {
+    "musicgen-large": "data", "qwen2-vl-7b": "data", "stablelm-1.6b": "data",
+    "zamba2-2.7b": "data", "h2o-danube-3-4b": "data", "rwkv6-3b": "data",
+    "granite-20b": "pod", "mixtral-8x7b": "pod", "gemma3-27b": "pod",
+    "grok-1-314b": "pod",
+}
+
+# v5e hardware constants (roofline)
+PEAK_FLOPS = 197e12        # bf16 / chip
+HBM_BW = 819e9             # bytes/s / chip
+ICI_BW = 50e9              # bytes/s / link
+
+_DTYPE_BYTES = {"f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1,
+                "f8e5m2": 1, "s64": 8, "u64": 8, "s32": 4, "u32": 4,
+                "s16": 2, "u16": 2, "s8": 1, "u8": 1, "pred": 1,
+                "c64": 8, "c128": 16}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+
+def collective_bytes(hlo_text: str):
+    """Sum output-shape bytes of every collective op in the (SPMD) HLO."""
+    totals = {c: 0 for c in _COLLECTIVES}
+    counts = {c: 0 for c in _COLLECTIVES}
+    shape_re = re.compile(r"(\w+)\[([\d,]*)\]")
+    for line in hlo_text.splitlines():
+        line = line.strip()
+        m = re.match(r"%?[\w\.\-]+\s*=\s*(.*?)\s*(all-gather|all-reduce|"
+                     r"reduce-scatter|all-to-all|collective-permute)", line)
+        if not m:
+            continue
+        op = m.group(2)
+        shapes = shape_re.findall(m.group(1))
+        nbytes = 0
+        for dt, dims in shapes:
+            if dt not in _DTYPE_BYTES:
+                continue
+            n = 1
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+            nbytes += n * _DTYPE_BYTES[dt]
+        totals[op] += nbytes
+        counts[op] += 1
+    return totals, counts
+
+
+def _tokens_sds(a, b, s):
+    lead = (a,) if a else ()
+    return {
+        "tokens": jax.ShapeDtypeStruct(lead + (b, s), jnp.int32),
+        "labels": jax.ShapeDtypeStruct(lead + (b, s), jnp.int32),
+    }
+
+
+def input_specs(arch: str, shape: str, a: int = 0):
+    """ShapeDtypeStruct stand-ins for every model input (no allocation)."""
+    cfg = ARCHS[arch]
+    info = SHAPES[shape]
+    s, b = info["seq"], info["batch"]
+    if info["kind"] == "train":
+        b_per = b // max(a, 1)
+        if cfg.arch_type == "vlm":
+            s_vis = s // 4
+            s_txt = s - s_vis
+            lead = (a,) if a else ()
+            return {
+                "tokens": jax.ShapeDtypeStruct(lead + (b_per, s_txt), jnp.int32),
+                "extra_embeds": jax.ShapeDtypeStruct(
+                    lead + (b_per, s_vis, cfg.d_model), jnp.dtype(cfg.dtype)),
+                "labels": jax.ShapeDtypeStruct(lead + (b_per, s), jnp.int32),
+                "positions": jax.ShapeDtypeStruct(lead + (3, b_per, s), jnp.int32),
+            }
+        return _tokens_sds(a, b_per, s)
+    if info["kind"] == "prefill":
+        if cfg.arch_type == "vlm":
+            s_vis = s // 4
+            return {
+                "tokens": jax.ShapeDtypeStruct((b, s - s_vis), jnp.int32),
+                "extra_embeds": jax.ShapeDtypeStruct(
+                    (b, s_vis, cfg.d_model), jnp.dtype(cfg.dtype)),
+                "positions": jax.ShapeDtypeStruct((3, b, s), jnp.int32),
+            }
+        return {"tokens": jax.ShapeDtypeStruct((b, s), jnp.int32)}
+    # decode: one new token against an s-long cache
+    return {"tokens": jax.ShapeDtypeStruct((b, 1), jnp.int32)}
+
+
+def model_flops(cfg, shape_name: str, n_epochs: int, a: int) -> float:
+    info = SHAPES[shape_name]
+    n_active = cfg.active_param_count()
+    tokens = info["batch"] * info["seq"]
+    if info["kind"] == "train":
+        return 6.0 * n_active * tokens * n_epochs
+    if info["kind"] == "prefill":
+        return 2.0 * n_active * tokens
+    return 2.0 * n_active * info["batch"]  # decode: one token per sequence
+
+
+def applicable(arch: str, shape: str) -> bool:
+    if shape == "long_500k":
+        return ARCHS[arch].subquadratic
+    return True
+
+
+def run_dryrun(arch: str, shape: str, multi_pod: bool, *, n_epochs: int = 2,
+               compress: bool = True, moe_dispatch: Optional[str] = None,
+               backend: str = "chunked", donate: bool = True,
+               unroll: bool = False, scan_repeats_override: Optional[int] = None,
+               kv_int8: bool = False, remat_group: int = 1):
+    """unroll=True makes cost_analysis FLOP/byte totals exact (XLA counts
+    loop bodies once) at much higher compile cost; the default scan build is
+    the production artifact whose memory_analysis is the fits-check.
+
+    scan_repeats_override=R builds a reduced-depth variant (R units + tail).
+    The roofline driver compiles unrolled R=1 and R=2 and extrapolates
+    linearly to the real depth — exact per-unit costs at small compile cost.
+    """
+    import dataclasses
+    cfg = ARCHS[arch]
+    cfg = dataclasses.replace(cfg, scan_unroll=unroll)
+    if kv_int8:
+        cfg = dataclasses.replace(cfg, kv_cache_int8=True)
+    if remat_group > 1:
+        cfg = dataclasses.replace(cfg, remat_group=remat_group)
+    if scan_repeats_override is not None:
+        n_layers = len(cfg.scan_unit) * scan_repeats_override + len(cfg.tail)
+        cfg = dataclasses.replace(cfg, scan_repeats=scan_repeats_override,
+                                  n_layers=n_layers)
+    if moe_dispatch and cfg.n_experts:
+        cfg = dataclasses.replace(cfg, moe_dispatch=moe_dispatch)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    info = SHAPES[shape]
+    ax = AGENT_AXIS[arch]
+    if ax == "pod" and cfg.n_experts and info["kind"] == "train":
+        # per-agent batch is data-sharded → keep MoE dispatch tokens sharded
+        cfg = dataclasses.replace(cfg, act_batch_axis="data")
+    aaxes = agent_axes(mesh, ax)
+    a = n_agents(mesh, ax)
+
+    t0 = time.time()
+    with mesh:
+        if info["kind"] == "train":
+            alg = DeployFedLT(cfg=cfg, n_epochs=n_epochs, compress=compress,
+                              backend=backend)
+            state_shape = jax.eval_shape(
+                lambda: alg.init(jax.random.PRNGKey(0), a))
+            # agents on the data axis ⇒ per-agent weights are TP-only;
+            # agents on the pod axis ⇒ weights are FSDP(data) × TP(model)
+            fsdp = None if ax == "data" else "data"
+            ps_agent = param_specs(state_shape.x, mesh, agent_axes=aaxes,
+                                   stacked=True, fsdp=fsdp)
+            ps_coord = param_specs(state_shape.y_hat, mesh, agent_axes=())
+            state_specs = DeployState(
+                x=ps_agent, z=ps_agent, c_up=ps_agent,
+                y_hat=ps_coord, c_down=ps_coord, k=P())
+            batch_sds = input_specs(arch, shape, a)
+            b_specs = batch_specs(batch_sds, mesh, agent_axes=aaxes,
+                                  stacked=True)
+            # wire gather target: replicate the agent dim, keep weight dims
+            rep_spec = jax.tree_util.tree_map(
+                lambda s: P(None, *tuple(s)[1:]), ps_agent,
+                is_leaf=lambda x: isinstance(x, P))
+
+            def train_step(state, batch):
+                return alg.round_step(state, batch,
+                                      agent_replicate_spec=rep_spec)
+
+            shard = lambda spec: jax.tree_util.tree_map(
+                lambda sp: NamedSharding(mesh, sp), spec,
+                is_leaf=lambda x: isinstance(x, P))
+            fn = jax.jit(train_step,
+                         in_shardings=(shard(state_specs), shard(b_specs)),
+                         out_shardings=(shard(state_specs), None),
+                         donate_argnums=(0,) if donate else ())
+            lowered = fn.lower(state_shape,
+                               jax.tree_util.tree_map(
+                                   lambda s: jax.ShapeDtypeStruct(s.shape, s.dtype),
+                                   batch_sds))
+        else:
+            p_shape = jax.eval_shape(
+                lambda: init_params(jax.random.PRNGKey(0), cfg))
+            p_spec = param_specs(p_shape, mesh, agent_axes=())
+            shard = lambda spec: jax.tree_util.tree_map(
+                lambda sp: NamedSharding(mesh, sp), spec,
+                is_leaf=lambda x: isinstance(x, P))
+            batch_sds = input_specs(arch, shape)
+            if info["kind"] == "prefill":
+                step = make_prefill_step(cfg, backend=backend)
+                b_specs = batch_specs(batch_sds, mesh, agent_axes=())
+                fn = jax.jit(step, in_shardings=(shard(p_spec), shard(b_specs)))
+                lowered = fn.lower(p_shape, batch_sds)
+            else:
+                b = info["batch"]
+                cache_shape = jax.eval_shape(
+                    lambda: init_cache(cfg, b, s_max=info["seq"],
+                                       dtype=jnp.dtype(cfg.dtype)))
+                c_spec = cache_specs(cache_shape, mesh,
+                                     shard_batch=(b > 1))
+                step = make_decode_step(cfg, backend=backend)
+                tok_sds = batch_sds["tokens"]
+                tok_spec = batch_specs({"tokens": tok_sds}, mesh,
+                                       agent_axes=())["tokens"]
+                fn = jax.jit(step, in_shardings=(shard(p_spec), shard(c_spec),
+                                                 shard({"t": tok_spec})["t"]),
+                             donate_argnums=(1,) if donate else ())
+                lowered = fn.lower(p_shape, cache_shape, tok_sds)
+
+        t_lower = time.time() - t0
+        t0 = time.time()
+        compiled = lowered.compile()
+        t_compile = time.time() - t0
+
+    # ---- analyses -------------------------------------------------------
+    cost = compiled.cost_analysis() or {}
+    mem = compiled.memory_analysis()
+    mem_d = {}
+    if mem is not None:
+        for f in ("argument_size_in_bytes", "output_size_in_bytes",
+                  "temp_size_in_bytes", "alias_size_in_bytes",
+                  "generated_code_size_in_bytes"):
+            mem_d[f] = getattr(mem, f, None)
+    hlo = compiled.as_text()
+    coll, coll_n = collective_bytes(hlo)
+
+    n_chips = 512 if multi_pod else 256
+    # NOTE: the compiled artifact is the per-partition (per-chip) module —
+    # cost_analysis flops/bytes, memory_analysis and the HLO collectives are
+    # all PER-DEVICE quantities (verified against hand-computed shard sizes).
+    flops = float(cost.get("flops", 0.0))
+    bytes_acc = float(cost.get("bytes accessed", 0.0))
+    coll_total = float(sum(coll.values()))
+    mf = model_flops(cfg, shape, n_epochs, a)
+
+    result = {
+        "arch": arch, "shape": shape,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "agent_axis": ax, "n_agents": a, "n_chips": n_chips,
+        "hlo_flops_per_chip": flops, "hlo_bytes_per_chip": bytes_acc,
+        "collective_bytes": coll, "collective_counts": coll_n,
+        "collective_bytes_total": coll_total,
+        "memory_analysis": mem_d,
+        "model_flops": mf,
+        "useful_flops_ratio": mf / (flops * n_chips) if flops else None,
+        # roofline terms (seconds), per-chip basis
+        "t_compute": flops / PEAK_FLOPS,
+        "t_memory": bytes_acc / HBM_BW,
+        "t_collective": coll_total / ICI_BW,
+        "lower_s": t_lower, "compile_s": t_compile,
+    }
+    terms = {k: result[k] for k in ("t_compute", "t_memory", "t_collective")}
+    result["bottleneck"] = max(terms, key=terms.get)
+    return result
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True, choices=sorted(ARCHS))
+    ap.add_argument("--shape", required=True, choices=sorted(SHAPES))
+    ap.add_argument("--mesh", default="single", choices=("single", "multi"))
+    ap.add_argument("--out", default=None, help="write JSON here")
+    ap.add_argument("--n-epochs", type=int, default=2)
+    ap.add_argument("--no-compress", action="store_true")
+    ap.add_argument("--moe-dispatch", default=None,
+                    choices=(None, "dense", "capacity"))
+    ap.add_argument("--backend", default="chunked")
+    ap.add_argument("--unroll", action="store_true")
+    ap.add_argument("--scan-repeats", type=int, default=None)
+    ap.add_argument("--kv-int8", action="store_true")
+    ap.add_argument("--remat-group", type=int, default=1)
+    args = ap.parse_args()
+
+    if not applicable(args.arch, args.shape):
+        js = json.dumps({"arch": args.arch, "shape": args.shape,
+                         "skipped": "full-attention arch at 500k ctx "
+                         "(see DESIGN.md §6)"})
+        print(js)
+        if args.out:
+            os.makedirs(os.path.dirname(args.out), exist_ok=True)
+            with open(args.out, "w") as f:
+                f.write(js)
+        return
+
+    res = run_dryrun(args.arch, args.shape, args.mesh == "multi",
+                     n_epochs=args.n_epochs, compress=not args.no_compress,
+                     moe_dispatch=args.moe_dispatch, backend=args.backend,
+                     unroll=args.unroll,
+                     scan_repeats_override=args.scan_repeats,
+                     kv_int8=args.kv_int8, remat_group=args.remat_group)
+    js = json.dumps(res, indent=2, default=str)
+    print(js)
+    if args.out:
+        os.makedirs(os.path.dirname(args.out), exist_ok=True)
+        with open(args.out, "w") as f:
+            f.write(js)
+
+
+if __name__ == "__main__":
+    main()

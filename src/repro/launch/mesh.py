@@ -1,0 +1,42 @@
+"""Production mesh construction (defined as functions — importing this module
+never touches jax device state)."""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh(data: int = 1, model: int = 1):
+    """Small mesh over however many (host) devices exist — used by tests."""
+    return jax.make_mesh((data, model), ("data", "model"))
+
+
+def mesh_axes(mesh) -> tuple:
+    return tuple(mesh.axis_names)
+
+
+def agent_axes(mesh, agent_axis: str):
+    """Mesh axes carrying the federated agent dimension.
+
+    agent_axis: "pod"  → agents = pods (big archs; single-pod ⇒ 1 agent)
+                "data" → agents spread over data(+pod) axes (small archs)
+    """
+    names = mesh.axis_names
+    if agent_axis == "data":
+        return tuple(n for n in names if n in ("pod", "data"))
+    if agent_axis == "pod":
+        return ("pod",) if "pod" in names else ()
+    raise ValueError(agent_axis)
+
+
+def n_agents(mesh, agent_axis: str) -> int:
+    axes = agent_axes(mesh, agent_axis)
+    n = 1
+    for a in axes:
+        n *= mesh.shape[a]
+    return max(n, 1)

@@ -1,0 +1,35 @@
+"""Serving steps: prefill (context → KV/SSM cache) and decode (one token).
+
+Satellites serve the coordinator model ŷ between training rounds (e.g.
+on-board inference over freshly captured imagery); these are the steps the
+inference-shaped dry-runs (prefill_32k / decode_32k / long_500k) lower.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..models.transformer import forward, init_cache
+
+
+def make_prefill_step(cfg, backend: str = "chunked"):
+    def prefill_step(params, batch):
+        b = jax.tree_util.tree_leaves(batch)[0].shape[0]
+        s = (batch["tokens"].shape[1] if "tokens" in batch else 0)
+        if batch.get("extra_embeds") is not None:
+            s += batch["extra_embeds"].shape[1]
+        cache = init_cache(cfg, b, s_max=s, dtype=jnp.dtype(cfg.dtype))
+        out = forward(params, cfg, batch, cache=cache, backend=backend)
+        # next-token logits only — serving returns the sampled continuation
+        return out.logits[:, -1], out.cache
+
+    return prefill_step
+
+
+def make_decode_step(cfg, backend: str = "chunked"):
+    def decode_step(params, cache, tokens):
+        out = forward(params, cfg, {"tokens": tokens}, cache=cache,
+                      backend=backend)
+        return out.logits[:, -1], out.cache
+
+    return decode_step

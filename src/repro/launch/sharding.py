@@ -1,0 +1,187 @@
+"""Sharding rules: parameter/state/batch pytrees → PartitionSpec trees.
+
+The same rule table serves every architecture; a dimension is only sharded
+when the mesh axis size divides it (checked here, so misconfigured configs
+fail loudly at spec-construction time rather than deep inside GSPMD).
+
+Layout summary (deploy mode):
+  * agent-stacked leaves get their leading agent dim sharded over the agent
+    mesh axes ("pod","data" or "pod");
+  * 2-D weights: input-major  (d_in, d_out)  → (fsdp, tp)
+                 output-major (d_out, d_in)  → (tp, fsdp)
+  * MoE expert stacks (E, d, f) → (None, fsdp, tp) / (E, f, d) → (None, tp, fsdp)
+  * embeddings (V, D) → (tp, fsdp); LM head (D, V) → (fsdp, tp)
+  * norms / scalars / tiny tensors → replicated
+  * scan-stacked layer dims → replicated (leading axis of stacked blocks)
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+# weight name → (row_role, col_role); roles: f=fsdp, t=tp, r=replicated
+_2D_RULES = {
+    "wq": "ft", "wk": "ft", "wv": "ft", "wo": "tf",
+    "up": "ft", "gate": "ft", "down": "tf",
+    "router": "fr", "in_proj": "ft", "out_proj": "tf",
+    "ck": "ft", "cv": "tf", "cr": "ft", "wr": "ft", "wg": "ft",
+    "mix_lora_a": "fr", "mix_lora_b": "rt",
+    "decay_lora_a": "fr", "decay_lora_b": "rt",
+    "table": "tf", "lm_head": "ft", "pos_table": "rt",
+    "conv_w": "rt",
+}
+
+_3D_MOE = {"up": "rft", "gate": "rft", "down": "rtf"}
+
+
+def _axis_size(mesh, name: Optional[str]) -> int:
+    if name is None:
+        return 1
+    return mesh.shape[name]
+
+
+def _role_axis(role: str, fsdp, tp):
+    return {"f": fsdp, "t": tp, "r": None}[role]
+
+
+def _maybe(axis, dim: int, mesh) -> Optional[str]:
+    """Shard dim over axis only if divisible (axis may be a tuple)."""
+    if axis is None:
+        return None
+    if isinstance(axis, tuple):
+        total = int(np.prod([_axis_size(mesh, a) for a in axis]))
+        return axis if total and dim % total == 0 else None
+    return axis if dim % _axis_size(mesh, axis) == 0 else None
+
+
+def _leaf_spec(path, shape, mesh, *, fsdp, tp, n_lead: int = 0):
+    """n_lead: number of leading non-weight dims (agent and/or scan stacking)
+    whose specs are provided by the caller."""
+    keys = [getattr(k, "key", getattr(k, "name", None)) for k in path]
+    keys = [k for k in keys if isinstance(k, str)]
+    name = keys[-1] if keys else ""
+    core = shape[n_lead:]
+    nd = len(core)
+
+    if nd <= 1:
+        return (None,) * nd
+    rule = None
+    if nd == 2 and name in _2D_RULES:
+        rule = _2D_RULES[name]
+    elif nd == 3 and name in _3D_MOE:
+        rule = _3D_MOE[name]
+    if rule is None:
+        return (None,) * nd
+    out = []
+    for role, dim in zip(rule, core):
+        out.append(_maybe(_role_axis(role, fsdp, tp), dim, mesh))
+    return tuple(out)
+
+
+def param_specs(params_shape, mesh, *, agent_axes: Tuple[str, ...] = (),
+                stacked: Optional[bool] = None, fsdp="data", tp="model"):
+    """PartitionSpec tree for a parameter pytree (shapes via eval_shape).
+
+    stacked: leaves carry a leading agent dim (replicated when agent_axes is
+    empty — e.g. a single pod-agent on the single-pod mesh).  Defaults to
+    bool(agent_axes).  Scan-stacked leaves (under the "scan" top-level key)
+    get one extra replicated leading dim.
+    """
+    if stacked is None:
+        stacked = bool(agent_axes)
+    agent = tuple(agent_axes) if agent_axes else None
+    if agent is not None and len(agent) == 1:
+        agent = agent[0]
+
+    def spec_for(path, leaf):
+        keys = [getattr(k, "key", None) for k in path]
+        n_lead = 0
+        lead = []
+        if stacked:
+            sz = leaf.shape[0]
+            lead.append(None if agent is None else _maybe(agent, sz, mesh))
+            n_lead += 1
+        if keys and keys[0] == "scan":
+            lead.append(None)
+            n_lead += 1
+        core = _leaf_spec(path, leaf.shape, mesh, fsdp=fsdp, tp=tp,
+                          n_lead=n_lead)
+        return P(*lead, *core)
+
+    return jax.tree_util.tree_map_with_path(spec_for, params_shape)
+
+
+def batch_specs(batch_shape, mesh, *, agent_axes: Tuple[str, ...] = (),
+                stacked: Optional[bool] = None, data="data"):
+    """Batch pytree: leading agent dim (if stacked) over agent axes, then the
+    batch dim over the remaining data axes; everything else replicated."""
+    if stacked is None:
+        stacked = bool(agent_axes)
+    agent = tuple(agent_axes)
+    # data axes not used by the agent dim
+    names = [n for n in mesh.axis_names if n in ("pod", "data")]
+    rest = tuple(n for n in names if n not in agent)
+    agent_spec = (agent if len(agent) > 1 else (agent[0] if agent else None))
+    rest_spec = (rest if len(rest) > 1 else (rest[0] if rest else None))
+
+    def spec_for(path, leaf):
+        dims = []
+        i = 0
+        if stacked:
+            dims.append(None if not agent
+                        else _maybe(agent_spec, leaf.shape[0], mesh))
+            i = 1
+        if leaf.ndim > i:
+            dims.append(_maybe(rest_spec, leaf.shape[i], mesh))
+        dims += [None] * (leaf.ndim - len(dims))
+        return P(*dims)
+
+    return jax.tree_util.tree_map_with_path(spec_for, batch_shape)
+
+
+def cache_specs(cache_shape, mesh, *, tp="model", seq_axis="data",
+                shard_batch=True):
+    """KV / SSM cache specs for serving.
+
+    KV leaves (B, S, H, D): batch over pod+data when divisible, else the
+    sequence dim over "data" (long-context batch=1 case) and heads over tp.
+    """
+    names = [n for n in mesh.axis_names if n in ("pod", "data")]
+    dp = tuple(names) if len(names) > 1 else (names[0] if names else None)
+
+    def core_spec(name, shape):
+        if len(shape) == 4 and name in ("k", "v"):     # (B, S, Hkv, D)
+            b, s, h, d = shape
+            if shard_batch and _maybe(dp, b, mesh):
+                return (_maybe(dp, b, mesh), None, _maybe(tp, h, mesh), None)
+            return (None, _maybe(seq_axis, s, mesh), _maybe(tp, h, mesh), None)
+        if len(shape) == 4 and name == "state":         # (B, H, P, N)
+            b = shape[0]
+            if shard_batch and _maybe(dp, b, mesh):
+                return (_maybe(dp, b, mesh), None, None, None)
+            return (None,) * 4
+        if len(shape) == 3 and name in ("k_scale", "v_scale"):  # (B, S, Hkv)
+            b, s, h = shape
+            if shard_batch and _maybe(dp, b, mesh):
+                return (_maybe(dp, b, mesh), None, _maybe(tp, h, mesh))
+            return (None, _maybe(seq_axis, s, mesh), _maybe(tp, h, mesh))
+        if name in ("conv", "last_t", "last_c") and len(shape) >= 1:
+            b = shape[0]
+            if shard_batch and _maybe(dp, b, mesh):
+                return (_maybe(dp, b, mesh),) + (None,) * (len(shape) - 1)
+            return (None,) * len(shape)
+        return (None,) * len(shape)
+
+    def spec_for(path, leaf):
+        keys = [getattr(k, "key", getattr(k, "name", "")) for k in path]
+        str_keys = [k for k in keys if isinstance(k, str)]
+        name = str_keys[-1] if str_keys else ""
+        scan_stacked = bool(str_keys) and str_keys[0] == "scan"
+        shape = leaf.shape[1:] if scan_stacked else leaf.shape
+        core = core_spec(name, shape)
+        return P(None, *core) if scan_stacked else P(*core)
+
+    return jax.tree_util.tree_map_with_path(spec_for, cache_shape)

@@ -1,0 +1,110 @@
+"""Basic layers: norms, MLPs, embeddings, positional encodings (pure JAX)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def rms_norm(x, weight, eps: float = 1e-5):
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    out = x.astype(jnp.float32) * jax.lax.rsqrt(var + eps)
+    return (out * (1.0 + weight.astype(jnp.float32))).astype(x.dtype)
+
+
+def init_rms_norm(d):
+    return jnp.zeros((d,))
+
+
+def act_fn(name: str):
+    return {"silu": jax.nn.silu, "gelu": jax.nn.gelu, "relu": jax.nn.relu}[name]
+
+
+# ---------------------------------------------------------------------------
+# MLP
+# ---------------------------------------------------------------------------
+
+def init_mlp(key, d_model: int, d_ff: int, gated: bool, dtype):
+    k1, k2, k3 = jax.random.split(key, 3)
+    s_in = 1.0 / np.sqrt(d_model)
+    s_out = 1.0 / np.sqrt(d_ff)
+    p = {
+        "up": (jax.random.normal(k1, (d_model, d_ff)) * s_in).astype(dtype),
+        "down": (jax.random.normal(k2, (d_ff, d_model)) * s_out).astype(dtype),
+    }
+    if gated:
+        p["gate"] = (jax.random.normal(k3, (d_model, d_ff)) * s_in).astype(dtype)
+    return p
+
+
+def mlp(params, x, act: str, gated: bool):
+    h = x @ params["up"]
+    if gated:
+        h = act_fn(act)(x @ params["gate"]) * h
+    else:
+        h = act_fn(act)(h)
+    return h @ params["down"]
+
+
+# ---------------------------------------------------------------------------
+# Embeddings / positions
+# ---------------------------------------------------------------------------
+
+def init_embed(key, vocab: int, d_model: int, dtype):
+    return {"table": (jax.random.normal(key, (vocab, d_model)) * 0.02).astype(dtype)}
+
+
+def embed(params, tokens):
+    return jnp.take(params["table"], tokens, axis=0)
+
+
+def sinusoidal_positions(positions, d_model: int, dtype=jnp.float32):
+    """positions: (...,) int → (..., d_model) sinusoidal encoding."""
+    half = d_model // 2
+    freqs = jnp.exp(-np.log(10000.0) * jnp.arange(half) / half)
+    ang = positions[..., None].astype(jnp.float32) * freqs
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1).astype(dtype)
+
+
+def rope_angles(positions, rot_dim: int, theta: float):
+    """positions (...,) int → cos,sin (..., rot_dim//2)."""
+    half = rot_dim // 2
+    freqs = theta ** (-jnp.arange(half, dtype=jnp.float32) / half)
+    ang = positions[..., None].astype(jnp.float32) * freqs
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x, cos, sin, rotary_pct: float = 1.0):
+    """x: (B, S, H, D); cos/sin: (B, S, rot_dim//2) or (B, S, H, rot_dim//2)."""
+    d = x.shape[-1]
+    rot = int(d * rotary_pct)
+    if rot % 2:
+        rot -= 1
+    x_rot, x_pass = x[..., :rot], x[..., rot:]
+    x1, x2 = x_rot[..., : rot // 2], x_rot[..., rot // 2:]
+    if cos.ndim == x.ndim - 1:  # broadcast over heads
+        cos, sin = cos[..., None, :], sin[..., None, :]
+    cos, sin = cos.astype(x.dtype), sin.astype(x.dtype)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return jnp.concatenate([out, x_pass], axis=-1) if rot < d else out
+
+
+def mrope_angles(positions3, rot_dim: int, theta: float, sections=(16, 24, 24)):
+    """Qwen2-VL M-RoPE: positions3 (3, B, S) = (temporal, height, width).
+
+    The rotary spectrum is partitioned into three sections, each rotated by
+    its own position stream; section sizes are in half-dim units and must sum
+    to rot_dim//2 (scaled automatically).
+    """
+    half = rot_dim // 2
+    sec = np.array(sections, dtype=np.float64)
+    sec = np.round(sec / sec.sum() * half).astype(int)
+    sec[2] = half - sec[0] - sec[1]
+    freqs = theta ** (-jnp.arange(half, dtype=jnp.float32) / half)
+    # which position stream drives each frequency band
+    stream_idx = jnp.asarray(
+        np.concatenate([np.full(s, i) for i, s in enumerate(sec)]))
+    p = positions3.astype(jnp.float32)            # (3, B, S)
+    p_sel = p[stream_idx]                          # (half, B, S)
+    ang = jnp.moveaxis(p_sel, 0, -1) * freqs       # (B, S, half)
+    return jnp.cos(ang), jnp.sin(ang)

@@ -1,0 +1,199 @@
+"""Mamba-2 block (SSD — state space duality), chunked for training.
+
+Recurrence per head h (state S ∈ ℝ^{P×N}, P = head dim, N = ssm_state):
+
+    S_t = a_t · S_{t−1} + (Δ_t x_t) ⊗ B_t          a_t = exp(−Δ_t·A_h)
+    y_t = S_t C_tᵀ + D_h · x_t
+
+Training uses the chunked form: within a chunk of Q tokens the quadratic
+"attention" form with decay mask  exp(cum_t − cum_j)  is factorized as
+(q̃ = C·e^{cum}) (k̃ = B·e^{−cum}) so only Q×Q per-head scores materialize;
+chunk-final states are carried with a ``lax.scan`` (n_chunks steps).
+Decode is the O(1) recurrent update.
+
+This is the TPU adaptation: MXU-friendly chunk matmuls instead of the CUDA
+selective-scan kernel; numerics kept in float32 inside the scan.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .layers import rms_norm
+
+
+def init_mamba2(key, cfg, dtype):
+    d = cfg.d_model
+    d_in = cfg.ssm_inner
+    h, p, n, g = cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state, cfg.ssm_n_groups
+    conv_dim = d_in + 2 * g * n
+    ks = jax.random.split(key, 5)
+    s = 1.0 / np.sqrt(d)
+    return {
+        # fused input projection: [x (d_in), z (d_in), B (g·n), C (g·n), dt (h)]
+        "in_proj": (jax.random.normal(ks[0], (d, 2 * d_in + 2 * g * n + h)) * s).astype(dtype),
+        "conv_w": (jax.random.normal(ks[1], (cfg.ssm_conv, conv_dim)) * 0.2).astype(dtype),
+        "conv_b": jnp.zeros((conv_dim,), dtype),
+        "a_log": jnp.log(jnp.linspace(1.0, 16.0, h)).astype(jnp.float32),
+        "d_skip": jnp.ones((h,), jnp.float32),
+        "dt_bias": jnp.zeros((h,), jnp.float32),
+        "norm_scale": jnp.zeros((d_in,)),
+        "out_proj": (jax.random.normal(ks[2], (d_in, d)) / np.sqrt(d_in)).astype(dtype),
+    }
+
+
+class SSMCache(NamedTuple):
+    state: jnp.ndarray       # (B, H, P, N) float32
+    conv: jnp.ndarray        # (B, conv_w − 1, conv_dim)
+
+
+def init_ssm_cache(batch, cfg, dtype):
+    h, p, n, g = cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state, cfg.ssm_n_groups
+    conv_dim = cfg.ssm_inner + 2 * g * n
+    return SSMCache(
+        state=jnp.zeros((batch, h, p, n), jnp.float32),
+        conv=jnp.zeros((batch, cfg.ssm_conv - 1, conv_dim), dtype),
+    )
+
+
+def _split_proj(cfg, proj):
+    d_in, g, n, h = cfg.ssm_inner, cfg.ssm_n_groups, cfg.ssm_state, cfg.ssm_heads
+    xz, rest = proj[..., : 2 * d_in], proj[..., 2 * d_in:]
+    x, z = xz[..., :d_in], xz[..., d_in:]
+    bc, dt = rest[..., : 2 * g * n], rest[..., 2 * g * n:]
+    return x, z, bc, dt
+
+
+def _causal_conv(u, w, b, carry=None):
+    """u: (B, S, C); depthwise causal conv width K. carry: (B, K−1, C)."""
+    kw = w.shape[0]
+    if carry is None:
+        pad = jnp.zeros((u.shape[0], kw - 1, u.shape[-1]), u.dtype)
+    else:
+        pad = carry.astype(u.dtype)
+    full = jnp.concatenate([pad, u], axis=1)
+    out = sum(full[:, i: i + u.shape[1]] * w[i] for i in range(kw))
+    new_carry = full[:, -(kw - 1):] if kw > 1 else None
+    return jax.nn.silu(out + b), new_carry
+
+
+def _ssd_chunked(xh, dt, a, Bm, Cm, d_skip, chunk: int, state0=None):
+    """Chunked SSD scan.
+
+    xh (B,S,H,P), dt (B,S,H), a = exp(A_log) (H,), Bm/Cm (B,S,G,N).
+    Returns y (B,S,H,P) and final state (B,H,P,N).
+    """
+    b, s, h, p = xh.shape
+    g, n = Bm.shape[2], Bm.shape[3]
+    rep = h // g
+    pad = (-s) % chunk
+    if pad:
+        xh = jnp.pad(xh, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        Bm = jnp.pad(Bm, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        Cm = jnp.pad(Cm, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    nc = xh.shape[1] // chunk
+    q = chunk
+
+    def to_chunks(t):
+        return t.reshape((b, nc, q) + t.shape[2:])
+
+    xc, dtc = to_chunks(xh), to_chunks(dt)
+    Bc = jnp.repeat(to_chunks(Bm), rep, axis=3)        # (B,nc,Q,H,N)
+    Cc = jnp.repeat(to_chunks(Cm), rep, axis=3)
+
+    loga = -dtc.astype(jnp.float32) * a                # (B,nc,Q,H) ≤ 0
+    cum = jnp.cumsum(loga, axis=2)                     # inclusive
+    total = cum[:, :, -1]                              # (B,nc,H)
+
+    # intra-chunk: scores[t,j] = (C_t·B_j)·exp(cum_t − cum_j)·dt_j, j ≤ t
+    def intra(xb, dtb, Bb, Cb, cumb):
+        # shapes: (B,Q,H,*) for one chunk — vmapped over chunk axis
+        scores = jnp.einsum("bthn,bjhn->bhtj", Cb, Bb).astype(jnp.float32)
+        decay = cumb[:, :, None, :] - cumb[:, None, :, :]       # (B,t,j,H)
+        decay = jnp.transpose(decay, (0, 3, 1, 2))              # (B,H,t,j)
+        mask = jnp.tril(jnp.ones((q, q), bool))
+        # mask BEFORE exp: upper-triangle decays are positive and would
+        # overflow, poisoning the backward pass with inf·0 = NaN.
+        w = jnp.exp(jnp.where(mask, decay, -jnp.inf)) * scores
+        w = w * dtb.astype(jnp.float32).transpose(0, 2, 1)[:, :, None, :]
+        return jnp.einsum("bhtj,bjhp->bthp", w.astype(xb.dtype), xb)
+
+    y_intra = jax.vmap(intra, in_axes=(1, 1, 1, 1, 1), out_axes=1)(
+        xc, dtc, Bc, Cc, cum)
+
+    # chunk-final contributions: S_chunk = Σ_j exp(total − cum_j)·dt_j·x_j⊗B_j
+    k_dec = jnp.exp(total[:, :, None] - cum) * dtc.astype(jnp.float32)  # (B,nc,Q,H)
+    s_chunk = jnp.einsum("bcqh,bcqhp,bcqhn->bchpn",
+                         k_dec, xc.astype(jnp.float32), Bc.astype(jnp.float32))
+
+    # inter-chunk scan over chunk states
+    def scan_fn(S, inp):
+        tot_c, s_c = inp                                 # (B,H), (B,H,P,N)
+        S_in = S
+        S = jnp.exp(tot_c)[:, :, None, None] * S + s_c
+        return S, S_in
+
+    S0 = jnp.zeros((b, h, p, n), jnp.float32) if state0 is None else state0
+    S_final, S_in_per_chunk = jax.lax.scan(
+        scan_fn, S0, (jnp.moveaxis(total, 1, 0), jnp.moveaxis(s_chunk, 1, 0)))
+    S_in = jnp.moveaxis(S_in_per_chunk, 0, 1)            # (B,nc,H,P,N)
+
+    # inter-chunk output: y_t += C_t · (exp(cum_t) · S_in)
+    q_dec = jnp.exp(cum)                                  # (B,nc,Q,H)
+    y_inter = jnp.einsum("bcqhn,bchpn,bcqh->bcqhp",
+                         Cc.astype(jnp.float32), S_in, q_dec)
+
+    y = y_intra.astype(jnp.float32) + y_inter + d_skip[None, None, :, None] \
+        * xc.astype(jnp.float32)
+    y = y.reshape(b, nc * q, h, p)[:, :s]
+    return y, S_final
+
+
+def mamba2_block(params, cfg, x, cache: Optional[SSMCache] = None):
+    """x: (B, S, D) → (B, S, D); cache for decode. Returns (y, new_cache)."""
+    b, s, d = x.shape
+    h, p, n, g = cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state, cfg.ssm_n_groups
+    proj = x @ params["in_proj"]
+    xi, z, bc, dt_raw = _split_proj(cfg, proj)
+
+    conv_in = jnp.concatenate([xi, bc], axis=-1)
+    conv_out, conv_carry = _causal_conv(conv_in, params["conv_w"],
+                                        params["conv_b"],
+                                        None if cache is None else cache.conv)
+    xi = conv_out[..., : cfg.ssm_inner]
+    bc = conv_out[..., cfg.ssm_inner:]
+    Bm = bc[..., : g * n].reshape(b, s, g, n)
+    Cm = bc[..., g * n:].reshape(b, s, g, n)
+
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + params["dt_bias"])  # (B,S,H)
+    a = jnp.exp(params["a_log"])                                          # (H,)
+    xh = xi.reshape(b, s, h, p)
+
+    if cache is None or s > 1:
+        state0 = None if cache is None else cache.state
+        y, S = _ssd_chunked(xh, dt, a, Bm, Cm, params["d_skip"],
+                            cfg.chunk_size, state0)
+    else:
+        # decode: one recurrent step
+        a_t = jnp.exp(-dt[:, 0] * a)                                      # (B,H)
+        upd = jnp.einsum("bh,bhp,bhn->bhpn", dt[:, 0],
+                         xh[:, 0].astype(jnp.float32),
+                         jnp.repeat(Bm[:, 0], h // g, axis=1).astype(jnp.float32))
+        S = a_t[:, :, None, None] * cache.state + upd
+        y = jnp.einsum("bhpn,bhn->bhp", S,
+                       jnp.repeat(Cm[:, 0], h // g, axis=1).astype(jnp.float32))
+        y = y + params["d_skip"][None, :, None] * xh[:, 0].astype(jnp.float32)
+        y = y[:, None]
+
+    y = y.reshape(b, s, cfg.ssm_inner).astype(x.dtype)
+    y = y * jax.nn.silu(z)                       # gated
+    y = rms_norm(y, params["norm_scale"], cfg.norm_eps)
+    out = y @ params["out_proj"]
+    new_cache = None
+    if cache is not None:
+        new_cache = SSMCache(state=S, conv=conv_carry)
+    return out, new_cache

@@ -1,0 +1,164 @@
+"""Mixture-of-Experts MLP (top-k router) — grok-1, mixtral.
+
+Two dispatch modes (``cfg.moe_dispatch``):
+
+  * ``dense``    — every token is run through EVERY expert and combined with
+                   top-k gate weights (zeros elsewhere).  Simple, sharding-
+                   friendly, but wastes E/k× the expert FLOPs.  This is the
+                   baseline the §Perf hillclimb starts from.
+  * ``capacity`` — GSPMD/Switch-style: each expert processes at most
+                   C = ceil(T·k·cf/E) tokens, selected by one-hot dispatch
+                   einsums.  FLOPs ∝ k·cf instead of E.  Tokens overflowing
+                   an expert's capacity are dropped (standard behaviour);
+                   the combine weights renormalize over surviving routes.
+
+Router: softmax over expert logits, top-k, weights renormalized among the
+selected experts (mixtral convention).  An auxiliary load-balance loss
+(Switch §2.2) is returned for the training objective.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .layers import act_fn
+
+
+def init_moe(key, cfg, dtype):
+    d, f, e = cfg.d_model, cfg.d_ff, cfg.n_experts
+    ks = jax.random.split(key, 4)
+    s_in, s_out = 1.0 / np.sqrt(d), 1.0 / np.sqrt(f)
+    return {
+        "router": (jax.random.normal(ks[0], (d, e)) * s_in).astype(dtype),
+        "up": (jax.random.normal(ks[1], (e, d, f)) * s_in).astype(dtype),
+        "gate": (jax.random.normal(ks[2], (e, d, f)) * s_in).astype(dtype),
+        "down": (jax.random.normal(ks[3], (e, f, d)) * s_out).astype(dtype),
+    }
+
+
+def _route(params, x, cfg):
+    """x: (T, D) → gate weights (T, E) (zeros off top-k), probs, topk idx."""
+    logits = (x @ params["router"]).astype(jnp.float32)    # (T, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_w, top_i = jax.lax.top_k(probs, cfg.moe_top_k)     # (T, k)
+    top_w = top_w / jnp.sum(top_w, axis=-1, keepdims=True)
+    gates = jnp.zeros_like(probs).at[
+        jnp.arange(x.shape[0])[:, None], top_i].set(top_w)
+    return gates, probs, top_i
+
+
+def _expert_mlp(params, x, cfg):
+    """x: (E, C, D) → (E, C, D), batched over experts."""
+    h = jnp.einsum("ecd,edf->ecf", x, params["up"])
+    g = jnp.einsum("ecd,edf->ecf", x, params["gate"])
+    h = act_fn(cfg.mlp_act)(g) * h
+    return jnp.einsum("ecf,efd->ecd", h, params["down"])
+
+
+def load_balance_loss(probs, gates, n_experts: int):
+    """Switch-style auxiliary loss: E · Σ_e f_e · P_e."""
+    frac_tokens = jnp.mean((gates > 0).astype(jnp.float32), axis=0)
+    frac_probs = jnp.mean(probs, axis=0)
+    return n_experts * jnp.sum(frac_tokens * frac_probs)
+
+
+def moe_dense(params, x, cfg):
+    """x: (B, S, D).  All experts on all tokens, gate-combined."""
+    b, s, d = x.shape
+    xt = x.reshape(-1, d)
+    gates, probs, _ = _route(params, xt, cfg)
+    # (E, T, D): every expert sees every token
+    h = jnp.einsum("td,edf->etf", xt, params["up"])
+    g = jnp.einsum("td,edf->etf", xt, params["gate"])
+    h = act_fn(cfg.mlp_act)(g) * h
+    out = jnp.einsum("etf,efd->etd", h, params["down"])
+    out = jnp.einsum("etd,te->td", out, gates.astype(out.dtype))
+    aux = load_balance_loss(probs, gates, cfg.n_experts)
+    return out.reshape(b, s, d), aux
+
+
+# tokens per dispatch group: bounds the (G, E, C) one-hot tensors — their
+# size per token is E·C = E·(G·k·cf/E) = G·k·cf, so SMALLER groups mean
+# proportionally smaller dispatch/combine tensors (and their gradients,
+# which all-reduce over the model axis).  256 ⇒ 640 slots/token at k=2.
+MOE_GROUP = 256
+
+
+def moe_capacity(params, x, cfg):
+    """GSPMD/Switch-style capacity dispatch with token groups.
+
+    Tokens are partitioned into groups of G; within each group every expert
+    accepts at most C = ceil(G·k·cf/E) tokens (overflow dropped, standard).
+    The dispatch/combine one-hots are (n_g, G, E, C) — linear in T, unlike a
+    flat (T, E, T·k·cf/E) layout which is quadratic.
+    """
+    b, s, d = x.shape
+    e, k = cfg.n_experts, cfg.moe_top_k
+
+    def wsc(t, *spec):
+        """Keep tokens sharded through the group reshapes (GSPMD otherwise
+        gathers the full token tensor at every reshape boundary)."""
+        ax = getattr(cfg, "act_batch_axis", None)
+        if ax is None:
+            return t
+        from jax.sharding import PartitionSpec as P
+        return jax.lax.with_sharding_constraint(
+            t, P(*[(ax if s == "b" else None) for s in spec]))
+
+    xt = x.reshape(-1, d)
+    t = xt.shape[0]
+    g = min(MOE_GROUP, t)
+    pad = (-t) % g
+    if pad:
+        xt = jnp.pad(xt, ((0, pad), (0, 0)))
+    xt = wsc(xt, "b", "d")
+    n_g = xt.shape[0] // g
+    cap = max(1, int(np.ceil(g * k * cfg.capacity_factor / e)))
+    cap = min(cap, g)
+
+    gates, probs, top_i = _route(params, xt, cfg)           # (T', E), (T', k)
+    gates_g = wsc(gates.reshape(n_g, g, e), "b", None, None)
+    top_g = wsc(top_i.reshape(n_g, g, k), "b", None, None)
+
+    combine = jnp.zeros((n_g, g, e, cap), jnp.float32)
+    dispatch = jnp.zeros((n_g, g, e, cap), bool)
+    used = jnp.zeros((n_g, e), jnp.float32)
+    for c in range(k):
+        onehot = jax.nn.one_hot(top_g[..., c], e, dtype=jnp.float32)  # (n_g,G,E)
+        pos = jnp.cumsum(onehot, axis=1) - 1.0 + used[:, None, :]
+        pos_tok = jnp.sum(pos * onehot, axis=-1)            # (n_g, G)
+        keep = pos_tok < cap
+        w = jnp.sum(gates_g * onehot, axis=-1) * keep
+        pos_oh = jax.nn.one_hot(pos_tok.astype(jnp.int32), cap,
+                                dtype=jnp.float32)          # (n_g, G, C)
+        sel = onehot[..., None] * pos_oh[..., None, :]      # (n_g, G, E, C)
+        combine = combine + w[..., None, None] * sel
+        dispatch = dispatch | ((sel > 0) & keep[..., None, None])
+        used = used + jnp.sum(onehot * keep[..., None], axis=1)
+
+    # dispatch: (n_g, E, C, D) → experts run on (E, n_g·C, D)
+    xg = wsc(xt.reshape(n_g, g, d), "b", None, "d")
+    dispatch = wsc(dispatch, "b", None, None, None)
+    combine = wsc(combine, "b", None, None, None)
+    # hard routing: no gradient flows through the dispatch one-hot (kills
+    # the (G,E,C)-shaped backward einsum + its cross-model all-reduce)
+    disp_f = jax.lax.stop_gradient(dispatch.astype(xt.dtype))
+    xe = jnp.einsum("gtec,gtd->gecd", disp_f, xg)
+    xe = wsc(xe, "b", None, None, "d")
+    xe = jnp.transpose(xe, (1, 0, 2, 3)).reshape(e, n_g * cap, d)
+    xe = wsc(xe, None, "b", "d")
+    ye = _expert_mlp(params, xe, cfg)
+    ye = wsc(ye, None, "b", "d")
+    ye = jnp.transpose(ye.reshape(e, n_g, cap, d), (1, 0, 2, 3))
+    out = jnp.einsum("gtec,gecd->gtd", combine.astype(ye.dtype), ye)
+    out = wsc(out, "b", None, "d")
+    out = out.reshape(-1, d)[:t]
+    aux = load_balance_loss(probs, gates, e)
+    return out.reshape(b, s, d), aux
+
+
+def moe(params, x, cfg):
+    if cfg.moe_dispatch == "capacity":
+        return moe_capacity(params, x, cfg)
+    return moe_dense(params, x, cfg)

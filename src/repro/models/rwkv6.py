@@ -1,0 +1,202 @@
+"""RWKV-6 ("Finch") block: time-mix with data-dependent decay + channel-mix.
+
+Per head (key/value dim P), state S ∈ ℝ^{P×P}:
+
+    o_t = r_tᵀ (S_{t−1} + diag(u) k_t v_tᵀ)
+    S_t = diag(w_t) S_{t−1} + k_t v_tᵀ,     w_t = exp(−exp(ŵ_t)) ∈ (0,1)
+
+with data-dependent ŵ_t (low-rank LoRA on the token-shifted input) and a
+learned per-channel bonus u.  Training uses the chunked factorized form
+(per-channel decay cumsum; q̃ = r·e^{cw}, k̃ = k·e^{−cw}) analogous to the
+Mamba-2 SSD path; decode is the O(1) recurrence.
+
+Simplifications vs the reference implementation (documented in DESIGN.md):
+single data-dependent lerp for the receptance/key/value/gate token-shift
+(RWKV-6 uses five separate LoRA lerps), and the decay LoRA rank is fixed at
+64.  The recurrence itself is exact.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .layers import rms_norm
+
+
+LORA_RANK = 64
+RWKV_CHUNK = 64   # chunk for the wkv scan (bounds the exp-split dynamic range)
+
+
+def init_rwkv6(key, cfg, dtype):
+    d = cfg.d_model
+    ks = jax.random.split(key, 10)
+    s = 1.0 / np.sqrt(d)
+    return {
+        # time-mix
+        "mix_base": jnp.full((4, d), 0.5, dtype),   # r,k,v,g static lerp
+        "mix_lora_a": (jax.random.normal(ks[0], (d, 32)) * s).astype(dtype),
+        "mix_lora_b": (jax.random.normal(ks[1], (32, 4 * d)) * 0.1 / np.sqrt(32)).astype(dtype),
+        "wr": (jax.random.normal(ks[2], (d, d)) * s).astype(dtype),
+        "wk": (jax.random.normal(ks[3], (d, d)) * s).astype(dtype),
+        "wv": (jax.random.normal(ks[4], (d, d)) * s).astype(dtype),
+        "wg": (jax.random.normal(ks[5], (d, d)) * s).astype(dtype),
+        "wo": (jax.random.normal(ks[6], (d, d)) * s).astype(dtype),
+        "decay_base": jnp.full((d,), -6.0, jnp.float32),
+        "decay_lora_a": (jax.random.normal(ks[7], (d, LORA_RANK)) * s).astype(dtype),
+        "decay_lora_b": (jax.random.normal(ks[8], (LORA_RANK, d)) * 0.1 / np.sqrt(LORA_RANK)).astype(dtype),
+        "bonus_u": jnp.zeros((d,), jnp.float32),
+        "ln_x": jnp.zeros((d,)),
+        # channel-mix
+        "ck": (jax.random.normal(ks[9], (d, cfg.d_ff)) * s).astype(dtype),
+        "cv": (jax.random.normal(jax.random.fold_in(key, 11), (cfg.d_ff, d))
+               / np.sqrt(cfg.d_ff)).astype(dtype),
+        "cr": (jax.random.normal(jax.random.fold_in(key, 12), (d, d)) * s).astype(dtype),
+        "cmix_r": jnp.full((d,), 0.5, dtype),
+        "cmix_k": jnp.full((d,), 0.5, dtype),
+    }
+
+
+class RWKVCache(NamedTuple):
+    state: jnp.ndarray    # (B, H, P, P) float32 — wkv state
+    last_t: jnp.ndarray   # (B, D) — previous token's time-mix input
+    last_c: jnp.ndarray   # (B, D) — previous token's channel-mix input
+
+
+def init_rwkv_cache(batch, cfg, dtype):
+    d = cfg.d_model
+    h = d // cfg.rwkv_head_dim
+    p = cfg.rwkv_head_dim
+    return RWKVCache(
+        state=jnp.zeros((batch, h, p, p), jnp.float32),
+        last_t=jnp.zeros((batch, d), dtype),
+        last_c=jnp.zeros((batch, d), dtype),
+    )
+
+
+def _token_shift(x, last):
+    """shifted[t] = x[t−1]; shifted[0] = last (zeros at seq start)."""
+    prev = jnp.concatenate([last[:, None], x[:, :-1]], axis=1)
+    return prev
+
+
+def _chunked_wkv(r, k, v, logw, u, chunk: int, state0=None):
+    """Chunked linear attention with per-channel decay.
+
+    r,k,v: (B,S,H,P); logw (B,S,H,P) = log decay ∈ (−∞, 0); u (H,P).
+    o_t = r_t·(S_{t−1} + diag(u) k_t v_tᵀ);  S_t = diag(w_t)S_{t−1} + k_t v_tᵀ.
+    """
+    b, s, h, p = r.shape
+    pad = (-s) % chunk
+    if pad:
+        z = lambda t: jnp.pad(t, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        r, k, v, logw = z(r), z(k), z(v), z(logw)
+    nc, q = r.shape[1] // chunk, chunk
+
+    def to_c(t):
+        return t.reshape(b, nc, q, h, p)
+
+    rc, kc, vc, lw = map(to_c, (r, k, v, logw))
+    lw = lw.astype(jnp.float32)
+    cw = jnp.cumsum(lw, axis=2)                 # inclusive cumsum within chunk
+    total = cw[:, :, -1]                        # (B,nc,H,P)
+
+    # intra-chunk: for j < t: factor exp(cw_{t−1} − cw_j) = exp(cw_t − lw_t − cw_j)
+    rt = rc.astype(jnp.float32) * jnp.exp(cw - lw)
+    kt = kc.astype(jnp.float32) * jnp.exp(-cw)
+
+    def intra(rb, kb, vb):
+        scores = jnp.einsum("bthp,bjhp->bhtj", rb, kb)
+        mask = jnp.tril(jnp.ones((q, q), bool), k=-1)   # strictly lower
+        scores = jnp.where(mask, scores, 0.0)
+        return jnp.einsum("bhtj,bjhp->bthp", scores, vb.astype(jnp.float32))
+
+    y_intra = jax.vmap(intra, in_axes=(1, 1, 1), out_axes=1)(rt, kt, vc)
+    # diagonal (bonus) term: o_t += (r_t ⊙ u · k_t) v_t
+    diag = jnp.einsum("bcqhp,bcqhp->bcqh",
+                      rc.astype(jnp.float32) * u[None, None, None],
+                      kc.astype(jnp.float32))
+    y_diag = diag[..., None] * vc.astype(jnp.float32)
+
+    # chunk state: S_chunk = Σ_j diag(exp(total − cw_j)) k_j v_jᵀ
+    k_dec = kc.astype(jnp.float32) * jnp.exp(total[:, :, None] - cw)
+    s_chunk = jnp.einsum("bcqhp,bcqhn->bchpn", k_dec, vc.astype(jnp.float32))
+
+    def scan_fn(S, inp):
+        tot_c, s_c = inp
+        S_in = S
+        S = jnp.exp(tot_c)[..., None] * S + s_c
+        return S, S_in
+
+    S0 = jnp.zeros((b, h, p, p), jnp.float32) if state0 is None else state0
+    S_final, S_ins = jax.lax.scan(
+        scan_fn, S0, (jnp.moveaxis(total, 1, 0), jnp.moveaxis(s_chunk, 1, 0)))
+    S_in = jnp.moveaxis(S_ins, 0, 1)            # (B,nc,H,P,P)
+
+    # inter-chunk: o_t += (r_t ⊙ exp(cw_{t−1})) · S_in
+    r_dec = rc.astype(jnp.float32) * jnp.exp(cw - lw)
+    y_inter = jnp.einsum("bcqhp,bchpn->bcqhn", r_dec, S_in)
+
+    y = (y_intra + y_diag + y_inter).reshape(b, nc * q, h, p)[:, :s]
+    return y, S_final
+
+
+def rwkv6_time_mix(params, cfg, x, cache: Optional[RWKVCache] = None):
+    b, s, d = x.shape
+    h, p = d // cfg.rwkv_head_dim, cfg.rwkv_head_dim
+    last = cache.last_t if cache is not None else jnp.zeros((b, d), x.dtype)
+    prev = _token_shift(x, last)
+    delta = prev - x
+
+    # data-dependent lerp (single shared LoRA, split 4 ways)
+    lora = jnp.tanh(x @ params["mix_lora_a"]) @ params["mix_lora_b"]
+    mixes = params["mix_base"][:, None, None] + lora.reshape(b, s, 4, d).transpose(2, 0, 1, 3)
+    xr, xk, xv, xg = (x + delta * m for m in mixes)
+
+    r = (xr @ params["wr"]).reshape(b, s, h, p)
+    k = (xk @ params["wk"]).reshape(b, s, h, p)
+    v = (xv @ params["wv"]).reshape(b, s, h, p)
+    g = jax.nn.silu(xg @ params["wg"])
+
+    dec = params["decay_base"] + (jnp.tanh(xk @ params["decay_lora_a"])
+                                  @ params["decay_lora_b"]).astype(jnp.float32)
+    logw = -jnp.exp(dec.astype(jnp.float32))            # log w_t ∈ (−∞, 0)
+    # clamp so the chunked exp-split factors stay inside float32 range
+    # (exp(RWKV_CHUNK·|logw|) ≤ e^80); applied in BOTH train and decode paths
+    # so the recurrence semantics stay identical.
+    logw = jnp.maximum(logw, -80.0 / RWKV_CHUNK)
+    logw = logw.reshape(b, s, h, p)
+    u = params["bonus_u"].reshape(h, p)
+
+    if cache is None or s > 1:
+        state0 = None if cache is None else cache.state
+        y, S = _chunked_wkv(r, k, v, logw, u, RWKV_CHUNK, state0)
+    else:
+        kv = jnp.einsum("bhp,bhn->bhpn", k[:, 0].astype(jnp.float32),
+                        v[:, 0].astype(jnp.float32))
+        o = jnp.einsum("bhp,bhpn->bhn", r[:, 0].astype(jnp.float32),
+                       cache.state + u[None, :, :, None] * kv)
+        S = jnp.exp(logw[:, 0])[..., None] * cache.state + kv
+        y = o[:, None]
+
+    y = y.reshape(b, s, d).astype(x.dtype)
+    y = rms_norm(y, params["ln_x"], cfg.norm_eps) * g
+    out = y @ params["wo"]
+    new_cache = None
+    if cache is not None:
+        new_cache = cache._replace(state=S, last_t=x[:, -1])
+    return out, new_cache
+
+
+def rwkv6_channel_mix(params, cfg, x, cache: Optional[RWKVCache] = None):
+    b, s, d = x.shape
+    last = cache.last_c if cache is not None else jnp.zeros((b, d), x.dtype)
+    prev = _token_shift(x, last)
+    xk = x + (prev - x) * params["cmix_k"]
+    xr = x + (prev - x) * params["cmix_r"]
+    kk = jnp.square(jax.nn.relu(xk @ params["ck"]))
+    out = jax.nn.sigmoid(xr @ params["cr"]) * (kk @ params["cv"])
+    new_cache = cache._replace(last_c=x[:, -1]) if cache is not None else None
+    return out, new_cache

@@ -1,0 +1,336 @@
+"""Decoder assembly: embeddings → scanned layer stack → head, + LM loss.
+
+The layer stack is ``scan_unit × scan_repeats`` lowered as ONE ``lax.scan``
+over stacked parameters (compact HLO even for 62-layer models), plus an
+optional non-repeating ``tail``.  "shared_attn" blocks (Zamba2) read their
+weights from a single shared parameter set closed over by the scan body —
+weight sharing is real, per-invocation KV caches are separate.
+
+Modes:
+  * train   — ``forward(params, cfg, batch)``                → logits, aux
+  * prefill — ``forward(..., cache=empty_cache(...))``       → logits, cache
+  * decode  — ``forward(..., cache=filled)`` with S=1 tokens → logits, cache
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .attention import KVCache, attention_block, init_attention, init_kv_cache
+from .config import ModelConfig
+from .layers import (embed, init_embed, init_mlp, init_rms_norm, mlp,
+                     mrope_angles, rms_norm, rope_angles, sinusoidal_positions)
+from .mamba2 import SSMCache, init_mamba2, init_ssm_cache, mamba2_block
+from .moe import init_moe, moe
+from .rwkv6 import (RWKVCache, init_rwkv6, init_rwkv_cache, rwkv6_channel_mix,
+                    rwkv6_time_mix)
+
+ATTN_KINDS = ("attn", "attn_local", "shared_attn")
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+def _init_block(key, cfg: ModelConfig, kind: str, dtype):
+    if kind in ("attn", "attn_local"):
+        k1, k2 = jax.random.split(key)
+        p = {"ln1": init_rms_norm(cfg.d_model),
+             "attn": init_attention(k1, cfg, dtype),
+             "ln2": init_rms_norm(cfg.d_model)}
+        if cfg.n_experts:
+            p["moe"] = init_moe(k2, cfg, dtype)
+        else:
+            p["mlp"] = init_mlp(k2, cfg.d_model, cfg.d_ff, cfg.mlp_gated, dtype)
+        return p
+    if kind == "mamba2":
+        return {"ln1": init_rms_norm(cfg.d_model),
+                "mamba": init_mamba2(key, cfg, dtype)}
+    if kind == "rwkv6":
+        return {"ln1": init_rms_norm(cfg.d_model),
+                "ln2": init_rms_norm(cfg.d_model),
+                "rwkv": init_rwkv6(key, cfg, dtype)}
+    if kind == "shared_attn":
+        return None  # parameters live in params["shared_attn"]
+    raise ValueError(kind)
+
+
+def init_params(key, cfg: ModelConfig):
+    dtype = jnp.dtype(cfg.dtype)
+    keys = jax.random.split(key, 8)
+    params: dict = {"embed": init_embed(keys[0], cfg.vocab_size, cfg.d_model, dtype)}
+
+    # scanned unit: stack each slot's params over repeats
+    unit_params = []
+    for slot, kind in enumerate(cfg.scan_unit):
+        if kind == "shared_attn":
+            unit_params.append({})
+            continue
+        ks = jax.random.split(jax.random.fold_in(keys[1], slot), cfg.scan_repeats)
+        unit_params.append(jax.vmap(
+            lambda k: _init_block(k, cfg, kind, dtype))(ks))
+    params["scan"] = tuple(unit_params)
+
+    params["tail"] = tuple(
+        _init_block(jax.random.fold_in(keys[2], i), cfg, kind, dtype)
+        for i, kind in enumerate(cfg.tail))
+
+    if "shared_attn" in cfg.scan_unit or "shared_attn" in cfg.tail:
+        params["shared_attn"] = {
+            "ln1": init_rms_norm(cfg.d_model),
+            "attn": init_attention(keys[3], cfg, dtype),
+        }
+
+    if cfg.pos_embed == "learned":
+        params["pos_table"] = (jax.random.normal(
+            keys[4], (cfg.max_seq, cfg.d_model)) * 0.02).astype(dtype)
+
+    params["final_norm"] = init_rms_norm(cfg.d_model)
+    if not cfg.tie_embeddings:
+        params["lm_head"] = (jax.random.normal(
+            keys[5], (cfg.d_model, cfg.vocab_size)) / np.sqrt(cfg.d_model)
+        ).astype(dtype)
+    return params
+
+
+# ---------------------------------------------------------------------------
+# caches
+# ---------------------------------------------------------------------------
+
+def _init_block_cache(cfg: ModelConfig, kind: str, batch: int, s_max: int, dtype):
+    if kind in ("attn", "shared_attn"):
+        return init_kv_cache(batch, s_max, cfg.n_kv_heads, cfg.head_dim, dtype,
+                             quantized=cfg.kv_cache_int8)
+    if kind == "attn_local":
+        w = min(cfg.sliding_window or s_max, s_max)
+        return init_kv_cache(batch, w, cfg.n_kv_heads, cfg.head_dim, dtype,
+                             quantized=cfg.kv_cache_int8)
+    if kind == "mamba2":
+        return init_ssm_cache(batch, cfg, dtype)
+    if kind == "rwkv6":
+        return init_rwkv_cache(batch, cfg, dtype)
+    raise ValueError(kind)
+
+
+def init_cache(cfg: ModelConfig, batch: int, s_max: int, dtype=None):
+    """Cache pytree: per scan slot stacked over repeats, plus tail list."""
+    dtype = dtype or jnp.dtype(cfg.dtype)
+
+    def stacked(kind):
+        one = _init_block_cache(cfg, kind, batch, s_max, dtype)
+        return jax.tree_util.tree_map(
+            lambda a: jnp.broadcast_to(a[None], (cfg.scan_repeats,) + a.shape).copy(), one)
+
+    return {
+        "scan": tuple(stacked(k) for k in cfg.scan_unit),
+        "tail": tuple(_init_block_cache(cfg, k, batch, s_max, dtype)
+                      for k in cfg.tail),
+        "length": jnp.zeros((), jnp.int32),
+    }
+
+
+# ---------------------------------------------------------------------------
+# forward
+# ---------------------------------------------------------------------------
+
+def _apply_block(params, cfg, kind, x, rope_cs, rope_cs_local, positions,
+                 cache, shared_params, backend):
+    """One layer. Returns (x, new_cache, aux)."""
+    aux = jnp.zeros((), jnp.float32)
+    if kind in ("attn", "attn_local", "shared_attn"):
+        p = shared_params if kind == "shared_attn" else params
+        window = cfg.sliding_window if kind == "attn_local" else None
+        cs = rope_cs_local if (kind == "attn_local" and rope_cs_local
+                               is not None) else rope_cs
+        h, new_cache = attention_block(
+            p["attn"], cfg, rms_norm(x, p["ln1"], cfg.norm_eps),
+            rope_cs=cs, positions=positions, window=window, cache=cache,
+            backend=backend)
+        x = x + h
+        if kind != "shared_attn":
+            h2 = rms_norm(x, params["ln2"], cfg.norm_eps)
+            if cfg.n_experts:
+                h2, aux = moe(params["moe"], h2, cfg)
+            else:
+                h2 = mlp(params["mlp"], h2, cfg.mlp_act, cfg.mlp_gated)
+            x = x + h2
+        return x, new_cache, aux
+    if kind == "mamba2":
+        h, new_cache = mamba2_block(
+            params["mamba"], cfg, rms_norm(x, params["ln1"], cfg.norm_eps), cache)
+        return x + h, new_cache, aux
+    if kind == "rwkv6":
+        h, new_cache = rwkv6_time_mix(
+            params["rwkv"], cfg, rms_norm(x, params["ln1"], cfg.norm_eps), cache)
+        x = x + h
+        h2, new_cache = rwkv6_channel_mix(
+            params["rwkv"], cfg, rms_norm(x, params["ln2"], cfg.norm_eps), new_cache)
+        return x + h2, new_cache, aux
+    raise ValueError(kind)
+
+
+class ForwardOut(NamedTuple):
+    logits: jnp.ndarray
+    cache: Any
+    aux_loss: jnp.ndarray
+
+
+def forward(params, cfg: ModelConfig, batch, cache=None,
+            backend: str = "chunked", remat: bool = True) -> ForwardOut:
+    """batch keys: "tokens" (B,S) int32 and/or "extra_embeds" (B,S_e,D)
+    prepended (VLM/audio stubs); optional "positions" (3,B,S) for M-RoPE."""
+    tokens = batch.get("tokens")
+    x_parts = []
+    if batch.get("extra_embeds") is not None:
+        x_parts.append(batch["extra_embeds"])
+    if tokens is not None:
+        x_parts.append(embed(params["embed"], tokens))
+    x = x_parts[0] if len(x_parts) == 1 else jnp.concatenate(x_parts, axis=1)
+    b, s, _ = x.shape
+
+    start = jnp.zeros((), jnp.int32)
+    if cache is not None:
+        start = cache["length"]
+    positions = start + jnp.arange(s)
+
+    # positional encodings
+    rope_cs = rope_cs_local = None
+    if cfg.pos_embed == "rope":
+        rot = int(cfg.head_dim * cfg.rotary_pct) // 2 * 2
+        pos_b = jnp.broadcast_to(positions[None], (b, s))
+        rope_cs = rope_angles(pos_b, rot, cfg.rope_theta)
+        if getattr(cfg, "rope_theta_local", None):
+            rope_cs_local = rope_angles(pos_b, rot, cfg.rope_theta_local)
+    elif cfg.pos_embed == "mrope":
+        rot = int(cfg.head_dim * cfg.rotary_pct) // 2 * 2
+        pos3 = batch.get("positions")
+        if pos3 is None:
+            pos3 = jnp.broadcast_to(positions[None, None], (3, b, s))
+        rope_cs = mrope_angles(pos3, rot, cfg.rope_theta)
+    elif cfg.pos_embed == "learned":
+        pos_emb = jnp.take(params["pos_table"],
+                           jnp.clip(positions, 0, cfg.max_seq - 1), axis=0)
+        x = x + pos_emb[None]
+    elif cfg.pos_embed == "sinusoidal":
+        x = x + sinusoidal_positions(positions, cfg.d_model, x.dtype)[None]
+
+    shared = params.get("shared_attn")
+    aux_total = jnp.zeros((), jnp.float32)
+
+    # ---- scanned unit ----
+    def unit_fn(x, slot_params, slot_caches):
+        new_caches = []
+        aux_sum = jnp.zeros((), jnp.float32)
+        for i, kind in enumerate(cfg.scan_unit):
+            c = None if slot_caches is None else slot_caches[i]
+            x, nc, aux = _apply_block(
+                None if kind == "shared_attn" else slot_params[i], cfg, kind,
+                x, rope_cs, rope_cs_local, positions, c, shared, backend)
+            new_caches.append(nc)
+            aux_sum += aux
+        return x, (tuple(new_caches) if slot_caches is not None else None), aux_sum
+
+    if cfg.scan_repeats > 0:
+        if cfg.scan_unroll:
+            # dry-run costing: python loop — forward AND backward fully
+            # unrolled in the HLO (scan's transpose is a loop that XLA's
+            # cost analysis would count once, hiding (R−1)× of the backward)
+            body = lambda x, p: unit_fn(x, p, None)
+            if remat and cache is None:
+                body = jax.checkpoint(body)
+            new_scan_caches = [] if cache is not None else None
+            for i in range(cfg.scan_repeats):
+                p_i = jax.tree_util.tree_map(lambda a: a[i], params["scan"])
+                if cache is None:
+                    x, _, a = body(x, p_i)
+                else:
+                    c_i = jax.tree_util.tree_map(lambda a: a[i], cache["scan"])
+                    x, nc, a = unit_fn(x, p_i, c_i)
+                    new_scan_caches.append(nc)
+                aux_total += a
+            if cache is not None:
+                new_scan_caches = jax.tree_util.tree_map(
+                    lambda *xs: jnp.stack(xs), *new_scan_caches)
+        elif cache is None:
+            body = lambda x, p: unit_fn(x, p, None)
+            g = max(1, min(cfg.remat_group, cfg.scan_repeats))
+            if g > 1 and cfg.scan_repeats % g == 0:
+                # two-level remat: checkpoint once per group of g units
+                def group_body(x, pg):
+                    def inner(carry, p):
+                        xx, aux = carry
+                        xx, _, a = body(xx, p)
+                        return (xx, aux + a), None
+                    return jax.lax.scan(inner, x, pg, unroll=cfg.scan_unroll)
+
+                group_body = jax.checkpoint(group_body) if remat else group_body
+                grouped = jax.tree_util.tree_map(
+                    lambda a: a.reshape((cfg.scan_repeats // g, g)
+                                        + a.shape[1:]), params["scan"])
+
+                def outer(carry, pg):
+                    carry, _ = group_body(carry, pg)
+                    return carry, None
+
+                (x, aux_total), _ = jax.lax.scan(
+                    outer, (x, aux_total), grouped, unroll=cfg.scan_unroll)
+            else:
+                if remat:
+                    body = jax.checkpoint(body)
+
+                def scan_body(carry, p):
+                    x, aux = carry
+                    x, _, a = body(x, p)
+                    return (x, aux + a), None
+
+                (x, aux_total), _ = jax.lax.scan(
+                    scan_body, (x, aux_total), params["scan"],
+                    unroll=cfg.scan_unroll)
+        else:
+            def scan_body(carry, pc):
+                x, aux = carry
+                p, c = pc
+                x, nc, a = unit_fn(x, p, c)
+                return (x, aux + a), nc
+
+            (x, aux_total), new_scan_caches = jax.lax.scan(
+                scan_body, (x, aux_total), (params["scan"], cache["scan"]),
+                unroll=cfg.scan_unroll)
+
+    # ---- tail ----
+    new_tail = []
+    for i, kind in enumerate(cfg.tail):
+        c = None if cache is None else cache["tail"][i]
+        x, nc, aux = _apply_block(params["tail"][i], cfg, kind, x, rope_cs,
+                                  rope_cs_local, positions, c, shared, backend)
+        new_tail.append(nc)
+        aux_total += aux
+
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    head = params["embed"]["table"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = x @ head
+
+    new_cache = None
+    if cache is not None:
+        new_cache = {"scan": new_scan_caches if cfg.scan_repeats else (),
+                     "tail": tuple(new_tail),
+                     "length": start + s}
+    return ForwardOut(logits=logits, cache=new_cache, aux_loss=aux_total)
+
+
+def lm_loss(params, cfg: ModelConfig, batch, backend: str = "chunked",
+            aux_coeff: float = 0.01):
+    """Next-token cross-entropy; labels −1 are ignored."""
+    out = forward(params, cfg, batch, backend=backend)
+    logits = out.logits[:, :-1].astype(jnp.float32)
+    labels = batch["labels"][:, 1:]
+    valid = labels >= 0
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    picked = jnp.take_along_axis(
+        logits, jnp.maximum(labels, 0)[..., None], axis=-1)[..., 0]
+    nll = jnp.where(valid, lse - picked, 0.0)
+    loss = jnp.sum(nll) / jnp.maximum(jnp.sum(valid), 1)
+    return loss + aux_coeff * out.aux_loss

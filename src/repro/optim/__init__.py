@@ -1,0 +1,3 @@
+from .solvers import local_gd, local_prox_gd, sgd, adam_init, adam_update
+
+__all__ = ["local_gd", "local_prox_gd", "sgd", "adam_init", "adam_update"]

@@ -1,0 +1,90 @@
+"""Local solvers (raw JAX — no optax dependency).
+
+The Fed-LT local subproblem (paper Alg. 1/2 line 10) is
+
+    w^{ℓ+1} = w^ℓ − γ (∇f_i(w^ℓ) + (w^ℓ − v)/ρ),
+
+i.e. gradient descent on f_i(w) + ‖w − v‖²/(2ρ).  ``local_prox_gd`` runs
+N_e such epochs with ``lax.scan`` so it stays a single compact HLO loop.
+``local_gd`` is the plain (FedAvg-style) variant.  Adam/SGD are provided for
+the standalone (non-federated) training drivers.
+"""
+from __future__ import annotations
+
+from typing import Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..core.pytree import tree_map
+
+
+def local_prox_gd(grad_fn: Callable, w0, v, data, *, n_epochs: int, gamma: float, rho: float):
+    """N_e epochs of prox-anchored GD. grad_fn(w, data) -> grad pytree."""
+
+    inv_rho = 1.0 / rho
+
+    def step(w, _):
+        g = grad_fn(w, data)
+        w = tree_map(lambda wl, gl, vl: wl - gamma * (gl + inv_rho * (wl - vl)), w, g, v)
+        return w, None
+
+    w, _ = jax.lax.scan(step, w0, None, length=n_epochs)
+    return w
+
+
+def local_gd(grad_fn: Callable, w0, data, *, n_epochs: int, gamma: float,
+             prox_center=None, prox_mu: float = 0.0):
+    """Plain local GD; optional FedProx term  μ/2·‖w − prox_center‖²."""
+
+    def step(w, _):
+        g = grad_fn(w, data)
+        if prox_center is not None and prox_mu > 0.0:
+            w = tree_map(lambda wl, gl, cl: wl - gamma * (gl + prox_mu * (wl - cl)),
+                         w, g, prox_center)
+        else:
+            w = tree_map(lambda wl, gl: wl - gamma * gl, w, g)
+        return w, None
+
+    w, _ = jax.lax.scan(step, w0, None, length=n_epochs)
+    return w
+
+
+# ---------------------------------------------------------------------------
+# Optimizers for the standalone training drivers.
+# ---------------------------------------------------------------------------
+
+def sgd(params, grads, lr: float, momentum_state=None, momentum: float = 0.0):
+    if momentum_state is None or momentum == 0.0:
+        return tree_map(lambda p, g: p - lr * g, params, grads), momentum_state
+    new_m = tree_map(lambda m, g: momentum * m + g, momentum_state, grads)
+    return tree_map(lambda p, m: p - lr * m, params, new_m), new_m
+
+
+class AdamState(NamedTuple):
+    mu: object
+    nu: object
+    count: jnp.ndarray
+
+
+def adam_init(params) -> AdamState:
+    z = tree_map(jnp.zeros_like, params)
+    return AdamState(mu=z, nu=tree_map(jnp.zeros_like, params), count=jnp.zeros((), jnp.int32))
+
+
+def adam_update(params, grads, state: AdamState, *, lr: float, b1: float = 0.9,
+                b2: float = 0.999, eps: float = 1e-8, weight_decay: float = 0.0):
+    count = state.count + 1
+    mu = tree_map(lambda m, g: b1 * m + (1 - b1) * g, state.mu, grads)
+    nu = tree_map(lambda v, g: b2 * v + (1 - b2) * g * g, state.nu, grads)
+    c = count.astype(jnp.float32)
+    mhat_scale = 1.0 / (1.0 - b1 ** c)
+    vhat_scale = 1.0 / (1.0 - b2 ** c)
+
+    def upd(p, m, v):
+        step = lr * (m * mhat_scale) / (jnp.sqrt(v * vhat_scale) + eps)
+        if weight_decay:
+            step = step + lr * weight_decay * p
+        return p - step
+
+    return tree_map(upd, params, mu, nu), AdamState(mu, nu, count)

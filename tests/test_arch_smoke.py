@@ -1,0 +1,118 @@
+"""Per-architecture smoke tests (brief requirement f).
+
+For each of the 10 assigned architectures, instantiate the REDUCED variant
+(1 scan repeat of the same unit structure, d_model=256, ≤4 experts) and run
+one forward + one train step on CPU, asserting output shapes and no NaNs.
+Also exercise the serve path: prefill + one decode step, checking that
+incremental decode matches the full-sequence forward (the KV-cache/SSM-state
+correctness invariant).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS, smoke_variant
+from repro.data.synthetic import make_batch
+from repro.models.transformer import forward, init_cache, init_params, lm_loss
+
+ARCH_NAMES = sorted(ARCHS)
+
+B, S = 2, 128
+
+
+@pytest.fixture(scope="module")
+def smoke_models():
+    return {}
+
+
+def _get(smoke_models, name):
+    if name not in smoke_models:
+        cfg = smoke_variant(ARCHS[name])
+        params = init_params(jax.random.PRNGKey(0), cfg)
+        smoke_models[name] = (cfg, params)
+    return smoke_models[name]
+
+
+@pytest.mark.parametrize("name", ARCH_NAMES)
+def test_forward_shapes_and_finite(smoke_models, name):
+    cfg, params = _get(smoke_models, name)
+    batch = make_batch(cfg, jax.random.PRNGKey(1), B, S)
+    out = jax.jit(lambda p, b: forward(p, cfg, b))(params, batch)
+    assert out.logits.shape == (B, S, cfg.vocab_size)
+    assert bool(jnp.all(jnp.isfinite(out.logits.astype(jnp.float32))))
+
+
+@pytest.mark.parametrize("name", ARCH_NAMES)
+def test_train_step_reduces_loss_and_finite(smoke_models, name):
+    cfg, params = _get(smoke_models, name)
+    batch = make_batch(cfg, jax.random.PRNGKey(2), B, S)
+
+    @jax.jit
+    def step(p):
+        loss, g = jax.value_and_grad(lambda q: lm_loss(q, cfg, batch))(p)
+        p = jax.tree_util.tree_map(lambda a, b: a - 0.05 * b.astype(a.dtype), p, g)
+        return p, loss
+
+    p1, l0 = step(params)
+    _, l1 = step(p1)
+    assert np.isfinite(float(l0)) and np.isfinite(float(l1))
+    assert float(l1) < float(l0)  # one step on the same batch must help
+
+
+@pytest.mark.parametrize("name", ARCH_NAMES)
+def test_prefill_then_decode_matches_full_forward(smoke_models, name):
+    cfg, params = _get(smoke_models, name)
+    s_ctx = 48
+    batch = make_batch(cfg, jax.random.PRNGKey(3), B, s_ctx + 1)
+    toks = batch["tokens"]
+    if cfg.arch_type == "vlm":
+        pytest.skip("mixed-modality decode covered by test_vlm_decode")
+
+    # full forward over s_ctx+1 tokens (oracle)
+    full = forward(params, cfg, {"tokens": toks}, backend="xla")
+
+    # prefill s_ctx, then decode token s_ctx
+    cache = init_cache(cfg, B, s_max=s_ctx + 8)
+    pre = forward(params, cfg, {"tokens": toks[:, :s_ctx]}, cache=cache,
+                  backend="xla")
+    dec = forward(params, cfg, {"tokens": toks[:, s_ctx:s_ctx + 1]},
+                  cache=pre.cache, backend="xla")
+    np.testing.assert_allclose(
+        np.asarray(dec.logits[:, 0].astype(jnp.float32)),
+        np.asarray(full.logits[:, s_ctx].astype(jnp.float32)),
+        rtol=2e-2, atol=2e-2)
+
+
+def test_vlm_decode():
+    cfg, params = None, None
+    cfg = smoke_variant(ARCHS["qwen2-vl-7b"])
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    batch = make_batch(cfg, jax.random.PRNGKey(4), B, 64)
+    out = forward(params, cfg, batch)
+    assert out.logits.shape[1] == 64
+    # decode one token after the mixed prefix
+    cache = init_cache(cfg, B, s_max=80)
+    pre = forward(params, cfg, batch, cache=cache)
+    nxt = {"tokens": batch["tokens"][:, -1:]}
+    dec = forward(params, cfg, nxt, cache=pre.cache)
+    assert dec.logits.shape == (B, 1, cfg.vocab_size)
+    assert bool(jnp.all(jnp.isfinite(dec.logits.astype(jnp.float32))))
+
+
+@pytest.mark.parametrize("name", ["mixtral-8x7b", "gemma3-27b", "h2o-danube-3-4b"])
+def test_sliding_window_restricts_attention(smoke_models, name):
+    """Perturbing a token outside every window must not change the last
+    logits of a pure-SWA model; gemma3 has global layers so is excluded."""
+    if name == "gemma3-27b":
+        pytest.skip("has global layers — perturbation legitimately leaks")
+    cfg, params = _get(smoke_models, name)
+    w = cfg.sliding_window
+    s = w + 64
+    toks = make_batch(cfg, jax.random.PRNGKey(5), 1, s)["tokens"]
+    out1 = forward(params, cfg, {"tokens": toks}, backend="xla")
+    toks2 = toks.at[0, 0].set((toks[0, 0] + 1) % cfg.vocab_size)
+    out2 = forward(params, cfg, {"tokens": toks2}, backend="xla")
+    np.testing.assert_allclose(
+        np.asarray(out1.logits[0, -1].astype(jnp.float32)),
+        np.asarray(out2.logits[0, -1].astype(jnp.float32)), rtol=1e-4, atol=1e-4)

@@ -1,0 +1,28 @@
+"""Checkpoint store: roundtrip + mismatch detection."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint.store import restore, save
+
+
+def test_roundtrip(tmp_path):
+    tree = {"a": jnp.arange(6, dtype=jnp.float32).reshape(2, 3),
+            "b": {"c": jnp.ones((4,), jnp.bfloat16)},
+            "d": (jnp.zeros((2,)), jnp.array(3, jnp.int32))}
+    path = str(tmp_path / "ck")
+    save(path, tree, step=7)
+    out = restore(path, tree)
+    for a, b in zip(jax.tree_util.tree_leaves(tree),
+                    jax.tree_util.tree_leaves(out)):
+        np.testing.assert_array_equal(np.asarray(a, np.float32),
+                                      np.asarray(b, np.float32))
+        assert a.dtype == b.dtype
+
+
+def test_shape_mismatch_raises(tmp_path):
+    path = str(tmp_path / "ck")
+    save(path, {"a": jnp.zeros((2, 2))})
+    with pytest.raises(ValueError, match="shape mismatch"):
+        restore(path, {"a": jnp.zeros((3, 2))})

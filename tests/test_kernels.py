@@ -1,0 +1,104 @@
+"""Pallas kernel validation: shape/dtype sweeps vs the pure-jnp oracles.
+
+Kernels run in interpret mode on CPU (the kernel body executes in Python);
+the same pallas_call lowers to TPU with explicit BlockSpec VMEM tiling.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ref
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.quantize_ef import quantize_ef
+
+
+@pytest.mark.parametrize("shape", [(64,), (300,), (128, 257), (3, 100, 33)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("levels", [255, 1000])
+def test_quantize_ef_matches_ref(shape, dtype, levels):
+    k1, k2 = jax.random.split(jax.random.PRNGKey(0))
+    msg = (jax.random.normal(k1, shape) * 0.2).astype(dtype)
+    cache = (jax.random.normal(k2, shape) * 0.01).astype(dtype)
+    w, c = quantize_ef(msg, cache, levels=levels, vmin=-0.5, vmax=0.5,
+                       interpret=True)
+    w_ref, c_ref = ref.quantize_ef_ref(msg, cache, levels=levels,
+                                       vmin=-0.5, vmax=0.5)
+    assert w.dtype == w_ref.dtype and w.shape == msg.shape
+    # XLA may FMA-fuse the index computation, flipping exact lattice ties by
+    # one ulp — EF's cache absorbs either side, so ties may differ by ≤1
+    # level and must be rare; everything else must match exactly.
+    diff = np.abs(np.asarray(w, np.int64) - np.asarray(w_ref, np.int64))
+    assert diff.max() <= 1
+    assert (diff > 0).mean() < 0.01
+    delta = 1.0 / levels
+    np.testing.assert_allclose(np.asarray(c, np.float32),
+                               np.asarray(c_ref, np.float32),
+                               atol=delta + 2e-2)
+    # EF conservation: decode(wire) + new_cache == msg + cache (in-range)
+    dec = np.asarray(w, np.float32) * delta - 0.5
+    lhs = dec + np.asarray(c, np.float32)
+    rhs = (np.asarray(msg, np.float32) + np.asarray(cache, np.float32))
+    inr = np.abs(rhs) < 0.45
+    np.testing.assert_allclose(lhs[inr], rhs[inr], atol=1e-2)
+
+
+def test_quantize_ef_information_conservation():
+    """wire decodes + new cache == msg + old cache (exact EF identity)."""
+    msg = jnp.linspace(-0.4, 0.4, 512).reshape(4, 128)
+    cache = jnp.full((4, 128), 0.003)
+    w, c = quantize_ef(msg, cache, levels=255, vmin=-0.5, vmax=0.5,
+                       interpret=True)
+    decoded = w.astype(jnp.float32) * (1.0 / 255) + (-0.5)
+    np.testing.assert_allclose(np.asarray(decoded + c),
+                               np.asarray(msg + cache), atol=1e-5)
+
+
+@pytest.mark.parametrize("s,d", [(128, 64), (257, 64), (384, 128)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_causal_matches_ref(s, d, dtype):
+    b, h = 2, 3
+    ks = jax.random.split(jax.random.PRNGKey(1), 3)
+    q = (jax.random.normal(ks[0], (b, s, h, d))).astype(dtype)
+    k = (jax.random.normal(ks[1], (b, s, h, d))).astype(dtype)
+    v = (jax.random.normal(ks[2], (b, s, h, d))).astype(dtype)
+    out = flash_attention(q, k, v, causal=True, interpret=True)
+    expect = ref.flash_attention_ref(q, k, v, causal=True)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 2e-5
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(expect, np.float32),
+                               rtol=tol, atol=tol)
+
+
+@pytest.mark.parametrize("window", [64, 128])
+def test_flash_attention_sliding_window(window):
+    b, s, h, d = 1, 320, 2, 64
+    ks = jax.random.split(jax.random.PRNGKey(2), 3)
+    q, k, v = (jax.random.normal(kk, (b, s, h, d)) for kk in ks)
+    out = flash_attention(q, k, v, causal=True, window=window, interpret=True)
+    expect = ref.flash_attention_ref(q, k, v, causal=True, window=window)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(expect),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_flash_attention_softcap():
+    b, s, h, d = 1, 128, 2, 64
+    ks = jax.random.split(jax.random.PRNGKey(3), 3)
+    q, k, v = (jax.random.normal(kk, (b, s, h, d)) * 2 for kk in ks)
+    out = flash_attention(q, k, v, causal=True, softcap=30.0, interpret=True)
+    expect = ref.flash_attention_ref(q, k, v, causal=True, softcap=30.0)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(expect),
+                               rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.parametrize("block_q,block_k", [(64, 64), (64, 128), (256, 128)])
+def test_flash_attention_block_shape_invariance(block_q, block_k):
+    """Output must be independent of the BlockSpec tiling choice."""
+    b, s, h, d = 1, 320, 2, 64
+    ks = jax.random.split(jax.random.PRNGKey(7), 3)
+    q, k, v = (jax.random.normal(kk, (b, s, h, d)) for kk in ks)
+    out = flash_attention(q, k, v, causal=True, block_q=block_q,
+                          block_k=block_k, interpret=True)
+    expect = ref.flash_attention_ref(q, k, v, causal=True)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(expect),
+                               rtol=2e-5, atol=2e-5)

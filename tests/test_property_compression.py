@@ -1,0 +1,130 @@
+"""Property-based tests (hypothesis) for compressors and error feedback.
+
+System invariants:
+  * every compressor is a contraction of the error: ‖C(x) − x‖ ≤ ‖x‖
+    (δ-approximate with δ > 0, paper Definition 1);
+  * TopK satisfies the sharp bound ‖C(x) − x‖² ≤ (1 − k/n)·‖x‖²;
+  * RandD keeps exactly d coordinates and zeroes the rest;
+  * quantization error is ≤ Δ/2 per coordinate inside [vmin, vmax];
+  * EF telescoping: Σ wires + final cache = Σ messages (no information is
+    ever lost, paper §2.2);
+  * EF cache stays bounded under repeated transmission of bounded messages.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.compression import (RandD, ScaledSign, TopK, UniformQuantizer,
+                                    quantize_decode, quantize_encode)
+from repro.core.error_feedback import EFChannel
+
+finite_arrays = st.lists(
+    st.floats(min_value=-5.0, max_value=5.0, allow_nan=False, width=32),
+    min_size=2, max_size=64,
+).map(lambda xs: jnp.asarray(np.array(xs, dtype=np.float32)))
+
+
+@settings(max_examples=50, deadline=None)
+@given(x=finite_arrays)
+def test_topk_delta_approximate(x):
+    frac = 0.5
+    C = TopK(fraction=frac)
+    err = C(None, x) - x
+    k = max(1, int(round(frac * x.size)))
+    bound = (1.0 - k / x.size) * jnp.sum(x * x)
+    assert float(jnp.sum(err * err)) <= float(bound) + 1e-5
+
+
+@settings(max_examples=50, deadline=None)
+@given(x=finite_arrays, seed=st.integers(0, 2**31 - 1))
+def test_randd_keeps_exactly_d(x, seed):
+    frac = 0.5
+    C = RandD(fraction=frac)
+    y = C(jax.random.PRNGKey(seed), x)
+    d = max(1, int(round(frac * x.size)))
+    kept = int(jnp.sum(y != 0))
+    zeros_in_x = int(jnp.sum(x == 0))
+    assert kept <= d
+    assert kept >= d - zeros_in_x  # only original zeros may "hide"
+    # error contraction
+    assert float(jnp.sum((y - x) ** 2)) <= float(jnp.sum(x * x)) + 1e-6
+
+
+@settings(max_examples=50, deadline=None)
+@given(x=finite_arrays)
+def test_scaled_sign_contracts(x):
+    C = ScaledSign()
+    err = C(None, x) - x
+    # ‖C(x)−x‖² = ‖x‖² − n·s² ≤ ‖x‖²
+    assert float(jnp.sum(err * err)) <= float(jnp.sum(x * x)) + 1e-5
+
+
+@settings(max_examples=50, deadline=None)
+@given(x=finite_arrays)
+def test_uniform_quantizer_halfstep_bound(x):
+    L, vmin, vmax = 100, -8.0, 8.0
+    C = UniformQuantizer(levels=L, vmin=vmin, vmax=vmax)
+    delta = (vmax - vmin) / L
+    err = jnp.abs(C(None, x) - x)
+    assert float(jnp.max(err)) <= delta / 2 + 1e-5
+
+
+@settings(max_examples=30, deadline=None)
+@given(x=finite_arrays)
+def test_wire_codec_roundtrip_matches_quantizer(x):
+    """int8/int16 on-wire codec decodes to the clip=True quantizer output."""
+    L, vmin, vmax = 200, -6.0, 6.0
+    C = UniformQuantizer(levels=L, vmin=vmin, vmax=vmax, clip=True)
+    idx = quantize_encode(x, L, vmin, vmax)
+    assert idx.dtype == jnp.uint8
+    dec = quantize_decode(idx, L, vmin, vmax)
+    np.testing.assert_allclose(np.asarray(dec), np.asarray(C(None, x)),
+                               rtol=0, atol=1e-4)
+
+
+@settings(max_examples=25, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), rounds=st.integers(2, 12))
+def test_ef_telescoping_sum(seed, rounds):
+    """Σ wires + final cache == Σ messages — all information transmitted."""
+    key = jax.random.PRNGKey(seed)
+    ch = EFChannel(UniformQuantizer(levels=8, vmin=-2, vmax=2, clip=True))
+    msgs = jax.random.uniform(key, (rounds, 16), minval=-1.5, maxval=1.5)
+    cache = jnp.zeros((16,))
+    total_wire = jnp.zeros((16,))
+    for r in range(rounds):
+        wire, cache = ch.send(None, msgs[r], cache)
+        total_wire = total_wire + wire
+    np.testing.assert_allclose(np.asarray(total_wire + cache),
+                               np.asarray(jnp.sum(msgs, axis=0)),
+                               rtol=0, atol=1e-4)
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_ef_cache_bounded(seed):
+    """With a contraction compressor, the cache norm stays bounded."""
+    key = jax.random.PRNGKey(seed)
+    ch = EFChannel(TopK(fraction=0.25))
+    msgs = jax.random.normal(key, (60, 32))
+    cache = jnp.zeros((32,))
+    norms = []
+    for r in range(60):
+        _, cache = ch.send(None, msgs[r], cache)
+        norms.append(float(jnp.linalg.norm(cache)))
+    # bound from EF theory: ‖c‖ ≤ √(1−δ)/(1−√(1−δ))·max‖msg‖ ; generous 4×
+    max_msg = float(jnp.max(jnp.linalg.norm(msgs, axis=1)))
+    delta = 0.25
+    bound = np.sqrt(1 - delta) / (1 - np.sqrt(1 - delta)) * max_msg
+    assert max(norms[20:]) <= 4 * bound
+
+
+def test_ef_disabled_is_plain_compression():
+    C = UniformQuantizer(levels=10, vmin=-1, vmax=1)
+    ch = EFChannel(C, enabled=False)
+    x = jnp.linspace(-0.9, 0.9, 16)
+    cache = jnp.ones((16,)) * 0.123
+    wire, new_cache = ch.send(None, x, cache)
+    np.testing.assert_allclose(np.asarray(wire), np.asarray(C(None, x)))
+    np.testing.assert_allclose(np.asarray(new_cache), np.asarray(cache))
