@@ -27,7 +27,7 @@ def main() -> None:
             traceback.print_exc()
             failures.append(name)
 
-    from . import fig4_trajectory, kernel_bench, table1_error_feedback
+    from . import fig4_trajectory, kernel_bench, sim_scale, table1_error_feedback
     from . import roofline, table2_space_comparison
 
     section("Table 1: error feedback ablation",
@@ -36,6 +36,8 @@ def main() -> None:
             lambda: fig4_trajectory.main(quick=quick))
     section("Table 2: constellation comparison",
             lambda: table2_space_comparison.main(quick=quick))
+    section("Sim scaling: contact plan + 1000-sat engine",
+            lambda: sim_scale.main(quick=quick))
     section("Kernel micro-benchmarks", kernel_bench.main)
     section("Roofline (dry-run aggregation)", roofline.main)
 

@@ -19,9 +19,9 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.constellation.orbits import GroundStation, Walker
-from repro.constellation.scheduler import Scheduler
 from repro.core.fedlt import optimality_error
 from repro.core.fedlt_sat import SpaceRunner
+from repro.sim import Engine, Scenario
 
 from .common import COMPRESSORS, RESULTS_DIR, make_algorithm, problem
 
@@ -33,9 +33,10 @@ LABEL = {"fedlt": "Fed-LTSat (this paper)", "fedavg": "FedAvg",
 def run(mc_runs=2, rounds=400, scale=1.0, verbose=True):
     n_sats = int(100 * scale) or 4
     walker = Walker(n_sats=n_sats, n_planes=max(2, n_sats // 10))
-    gs = GroundStation()
     # ~10 participants per round (paper: 10%)
-    sched = Scheduler(walker, gs, k_direct=4, n_relay=2)
+    engine = Engine(Scenario(name="table2", walker=walker,
+                             stations=(GroundStation(),),
+                             k_direct=4, n_relay=2))
 
     table = {}
     for comp_name, C in COMPRESSORS.items():
@@ -45,7 +46,7 @@ def run(mc_runs=2, rounds=400, scale=1.0, verbose=True):
                 data, loss, xbar, n_agents = problem(seed=mc, scale=scale)
                 alg = make_algorithm(algo, loss, C, ef=True)
                 st = alg.init(jnp.zeros((xbar.shape[0],)), n_agents)
-                runner = SpaceRunner(sched, wire_bits=C.wire_bits_per_scalar())
+                runner = SpaceRunner(engine, wire_bits=C.wire_bits_per_scalar())
                 st, logs = runner.run(alg, st, data, rounds,
                                       jax.random.PRNGKey(200 + mc))
                 errs.append(float(optimality_error(st.x, xbar)))

@@ -112,3 +112,21 @@ def in_plane_neighbors(walker: Walker, sat: int) -> tuple:
     plane, slot = sat // spp, sat % spp
     return (plane * spp + (slot - 1) % spp,
             plane * spp + (slot + 1) % spp)
+
+
+def isl_neighbors(walker: Walker, sat: int, cross_plane: bool = True) -> tuple:
+    """+grid ISL topology: the in-plane ring pair plus (optionally) the
+    same-slot satellites in the two adjacent planes, wrapping across the
+    seam (last plane ↔ plane 0).  Duplicates collapse for degenerate
+    constellations (≤ 2 planes or ≤ 2 slots per plane)."""
+    spp = walker.sats_per_plane
+    plane, slot = sat // spp, sat % spp
+    nbrs = list(in_plane_neighbors(walker, sat))
+    if cross_plane and walker.n_planes > 1:
+        nbrs.append(((plane - 1) % walker.n_planes) * spp + slot)
+        nbrs.append(((plane + 1) % walker.n_planes) * spp + slot)
+    out = []
+    for nb in nbrs:
+        if nb != sat and nb not in out:
+            out.append(nb)
+    return tuple(out)

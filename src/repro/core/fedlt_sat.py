@@ -1,19 +1,33 @@
 """Fed-LTSat (paper Algorithm 3) — the space-ified federated runner.
 
-Algorithm 3 = Algorithm 2 (Fed-LT + compression + EF) with
+Algorithm 3 = Algorithm 2 (Fed-LT + compression + EF) with the active set
+S_k chosen by the orbit-aware scheduler and uplinks either direct to a GS
+or forwarded over multi-hop ISLs — algebraically identical updates, but
+different time/bandwidth accounting, which is what Table 2 measures.
 
-  * the active set S_k chosen by the orbit-aware scheduler (line 6): the
-    satellites whose GS windows minimize the round completion time, plus
-    in-plane neighbours relayed through ISLs;
-  * uplink transmissions either direct to the GS or forwarded through a
-    neighbouring satellite (line 15) — algebraically identical updates, but
-    different time/bandwidth accounting, which is what Table 2 measures.
+The runner is ALGORITHM-AGNOSTIC (FedLT/FedAvg/FedProx/LED/5GCS) and drives
+any of them through the discrete-event engine (``repro.sim.engine``) in one
+of two aggregation modes:
 
-The runner is ALGORITHM-AGNOSTIC (works for FedAvg/FedProx/LED/5GCS too) —
-the paper space-ifies all baselines the same way for Table 2.
+  * ``mode="sync"`` — one engine round per communication round: the policy
+    schedules gateways + ISL relays, the engine executes the plan, and the
+    coordinator aggregates when the last scheduled update lands (the seed
+    semantics, now with contact-plan scheduling, dropout, and per-station
+    contention).
+  * ``mode="async"`` — FedBuff-style buffered asynchrony: satellites train
+    and deliver continuously; every ``buffer_size`` landed updates the
+    coordinator aggregates once, weighting each satellite's received wire
+    by ``(1 + staleness)^(-staleness_alpha)`` where staleness counts the
+    aggregations that happened while the update was in flight.  The
+    weighting is applied to the coordinator's received-wire state
+    (``z_hat`` for FedLT, ``m_hat`` for the baselines) — stale updates are
+    shrunk toward the previously received value, exactly the
+    staleness-damped server step of FedBuff, without touching the
+    algorithms themselves.
 """
 from __future__ import annotations
 
+import bisect
 import dataclasses
 from typing import Callable, List, Optional
 
@@ -22,8 +36,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..constellation.links import message_bytes
-from ..constellation.scheduler import Scheduler
-from .pytree import tree_size
+from .pytree import tree_map, tree_size
 
 
 @dataclasses.dataclass
@@ -33,35 +46,114 @@ class RoundLog:
     bytes_up: float        # cumulative uplink bytes over GS links
     n_active: int
     error: Optional[float] = None
+    staleness: Optional[float] = None   # async: mean staleness this round
 
 
-@dataclasses.dataclass(frozen=True)
+@dataclasses.dataclass(frozen=True, eq=False)
 class SpaceRunner:
-    """Drives any federated algorithm through the constellation simulator."""
+    """Drives any federated algorithm through the constellation simulator.
 
-    scheduler: Scheduler
+    ``engine`` is a :class:`repro.sim.engine.Engine`; a bare
+    :class:`~repro.constellation.scheduler.Scheduler` is also accepted and
+    wrapped in an engine over its own single-station scenario.
+    """
+
+    engine: object
     wire_bits: float = 32.0      # per-scalar uplink size (compressor-dependent)
+    mode: str = "sync"           # "sync" | "async"
+    buffer_size: int = 8         # async: aggregate every M landed updates
+    staleness_alpha: float = 0.5  # async: wire weight (1+s)^(-alpha)
+
+    def __post_init__(self):
+        if hasattr(self.engine, "select") and not hasattr(self.engine, "run_round"):
+            object.__setattr__(self, "engine", self.engine._engine())
+        if self.mode not in ("sync", "async"):
+            raise ValueError(f"mode must be 'sync' or 'async', got {self.mode!r}")
+
+    # -- shared setup ------------------------------------------------------
+    def _msg_bytes(self, state) -> float:
+        n_params = tree_size(state.x) // jax.tree_util.tree_leaves(
+            state.x)[0].shape[0]
+        return message_bytes(n_params, self.wire_bits)
 
     def run(self, alg, state, data, n_rounds: int, key,
             error_fn: Optional[Callable] = None,
             log_every: int = 10) -> tuple:
-        n_params = tree_size(state.x) // jax.tree_util.tree_leaves(
-            state.x)[0].shape[0]
-        msg = message_bytes(n_params, self.wire_bits)
-        round_fn = jax.jit(alg.round)
+        if self.mode == "async":
+            return self._run_async(alg, state, data, n_rounds, key,
+                                   error_fn, log_every)
+        return self._run_sync(alg, state, data, n_rounds, key,
+                              error_fn, log_every)
 
+    # -- synchronous rounds ------------------------------------------------
+    def _run_sync(self, alg, state, data, n_rounds, key, error_fn, log_every):
+        msg = self._msg_bytes(state)
+        round_fn = jax.jit(alg.round)
         t, up_bytes = 0.0, 0.0
         logs: List[RoundLog] = []
         keys = jax.random.split(key, n_rounds)
         for k in range(n_rounds):
-            active_np, duration = self.scheduler.select(t, msg)
-            active = jnp.asarray(active_np)
-            state, _ = round_fn(state, data, active, keys[k])
-            t += duration
+            res = self.engine.run_round(t, msg)
+            active_np = res.mask
+            state, _ = round_fn(state, data, jnp.asarray(active_np), keys[k])
+            t += res.duration
             up_bytes += float(active_np.sum()) * msg
-            if error_fn is not None and (k % log_every == 0 or k == n_rounds - 1):
-                logs.append(RoundLog(k, t, up_bytes, int(active_np.sum()),
-                                     float(error_fn(state))))
-            else:
-                logs.append(RoundLog(k, t, up_bytes, int(active_np.sum())))
+            err = (float(error_fn(state))
+                   if error_fn is not None and (k % log_every == 0
+                                                or k == n_rounds - 1) else None)
+            logs.append(RoundLog(k, t, up_bytes, int(active_np.sum()), err))
         return state, logs
+
+    # -- buffered-async (FedBuff-style) -------------------------------------
+    def _run_async(self, alg, state, data, n_rounds, key, error_fn, log_every):
+        msg = self._msg_bytes(state)
+        round_fn = jax.jit(alg.round)
+        n_agents = jax.tree_util.tree_leaves(state.x)[0].shape[0]
+        wire_field = "z_hat" if hasattr(state, "z_hat") else "m_hat"
+
+        deliveries = self.engine.run_async(
+            0.0, msg, n_deliveries=n_rounds * self.buffer_size)
+        agg_times: List[float] = []
+        logs: List[RoundLog] = []
+        up_bytes = 0.0
+        keys = jax.random.split(key, n_rounds)
+        for k in range(n_rounds):
+            chunk = deliveries[k * self.buffer_size:(k + 1) * self.buffer_size]
+            if not chunk:
+                break           # windows ran dry before n_rounds aggregations
+            active_np = np.zeros(n_agents, dtype=bool)
+            stale = np.zeros(n_agents, dtype=np.float64)
+            for d in chunk:
+                active_np[d.sat] = True
+                stale[d.sat] = len(agg_times) - bisect.bisect_right(
+                    agg_times, d.t_start)
+            weights = np.where(active_np,
+                               (1.0 + stale) ** (-self.staleness_alpha), 1.0)
+            new_state, _ = round_fn(state, data, jnp.asarray(active_np),
+                                    keys[k])
+            state = _damp_wires(new_state, state, wire_field,
+                                jnp.asarray(weights))
+            t = chunk[-1].t_done
+            agg_times.append(t)
+            up_bytes += len(chunk) * msg
+            err = (float(error_fn(state))
+                   if error_fn is not None and (k % log_every == 0
+                                                or k == n_rounds - 1) else None)
+            logs.append(RoundLog(k, t, up_bytes, int(active_np.sum()), err,
+                                 staleness=float(stale[active_np].mean())))
+        return state, logs
+
+
+def _damp_wires(new_state, old_state, field: str, weights):
+    """Staleness-weighted server step: blend the coordinator's received
+    wires between this round's value and the previous one, per agent.
+    Agents whose wire did not change this round are unaffected (blend is a
+    no-op when new == old)."""
+    new_wire = getattr(new_state, field)
+    old_wire = getattr(old_state, field)
+
+    def blend(nw, ow):
+        w = weights.reshape((-1,) + (1,) * (nw.ndim - 1))
+        return w * nw + (1.0 - w) * ow
+
+    return new_state._replace(**{field: tree_map(blend, new_wire, old_wire)})

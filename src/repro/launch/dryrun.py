@@ -245,6 +245,8 @@ def run_dryrun(arch: str, shape: str, multi_pod: bool, *, n_epochs: int = 2,
 
     # ---- analyses -------------------------------------------------------
     cost = compiled.cost_analysis() or {}
+    if isinstance(cost, (list, tuple)):     # older jax: list of per-module dicts
+        cost = cost[0] if cost else {}
     mem = compiled.memory_analysis()
     mem_d = {}
     if mem is not None:

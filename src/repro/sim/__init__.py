@@ -1,0 +1,13 @@
+"""Discrete-event constellation simulation: contact plans, multi-hop ISL
+routing, and an event-queue engine with synchronous and asynchronous
+(FedBuff-style) operation."""
+from .contacts import ContactPlan
+from .engine import Delivery, Engine, RoundResult, Scenario
+from .routing import Route, Router, gateway_schedule
+from .scenarios import SCENARIOS, get_scenario, names, register
+
+__all__ = [
+    "ContactPlan", "Delivery", "Engine", "RoundResult", "Scenario",
+    "Route", "Router", "gateway_schedule",
+    "SCENARIOS", "get_scenario", "names", "register",
+]

@@ -1,0 +1,390 @@
+"""Discrete-event constellation simulation engine.
+
+A single heapq event queue drives per-satellite state machines through the
+phases  train → (ISL relay) → wait-for-window → uplink.  The engine is
+pure simulation substrate: it produces a timeline of :class:`Delivery`
+records (which satellite's update landed at which ground station, when);
+the federated-learning algebra lives in :class:`repro.core.fedlt_sat`.
+
+Two operating modes:
+
+  * :meth:`Engine.run_round` — synchronous: a scheduling policy picks the
+    round's gateways + relays (see ``constellation.scheduler.Scheduler``),
+    the engine executes the plan event-by-event (GS-link serialization,
+    per-station contention, link dropout, heterogeneous compute times) and
+    returns when the last scheduled update lands.
+  * :meth:`Engine.run_async` — asynchronous: every satellite trains
+    continuously; on finishing it routes its update to the satellite with
+    the best estimated delivery (itself, or a multi-hop ISL forward) and
+    immediately retrains once the update is delivered.  Feeds FedBuff-style
+    buffered aggregation.
+
+Event kinds: ``train_done``, ``isl_arrive``, ``tx_start`` (link-free /
+window-open wakeup), ``tx_done``, ``retry`` (async: no window anywhere,
+try again later).
+
+All timing is host-side numpy/python — device compute stays in the
+federated core.
+"""
+from __future__ import annotations
+
+import dataclasses
+import heapq
+import itertools
+from collections import defaultdict
+from typing import Dict, List, Optional, Sequence, Tuple, Union
+
+import numpy as np
+
+from ..constellation.links import LinkModel
+from ..constellation.orbits import GroundStation, Walker
+from .contacts import ContactPlan
+from .routing import Route, Router
+
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class Scenario:
+    """A complete simulation setting — constellation, stations, links,
+    per-satellite compute, weather."""
+    name: str = "walker-kiruna"
+    walker: Walker = Walker()
+    stations: Tuple[GroundStation, ...] = (GroundStation(),)
+    link: LinkModel = LinkModel()
+    compute_time: Union[float, np.ndarray] = 30.0  # scalar or (S,) seconds
+    dropout: float = 0.0        # P(a contact window is weather-blocked)
+    k_direct: int = 4
+    n_relay: int = 2
+    max_hops: int = 4
+    lookahead: float = 7200.0   # scheduling horizon per round
+    dt: float = 10.0            # contact-plan grid resolution
+
+    def compute_of(self, sat: int) -> float:
+        if np.ndim(self.compute_time) == 0:
+            return float(self.compute_time)
+        return float(np.asarray(self.compute_time)[sat])
+
+    @property
+    def max_compute(self) -> float:
+        return float(np.max(self.compute_time))
+
+
+@dataclasses.dataclass
+class Delivery:
+    sat: int            # whose update landed
+    t_done: float       # delivery completion time
+    t_start: float      # when that satellite started training the update
+    gateway: int        # satellite that performed the GS uplink
+    station: int        # ground-station index
+    hops: int           # ISL hops travelled
+
+
+@dataclasses.dataclass
+class RoundResult:
+    mask: np.ndarray            # bool (S,) — updates actually delivered
+    duration: float
+    deliveries: List[Delivery]
+    scheduled: np.ndarray       # bool (S,) — what the policy planned
+    t0: float = 0.0
+
+
+class Engine:
+    """Event-queue simulator over a :class:`Scenario`.
+
+    ``policy`` must expose ``assign(t0, msg_bytes, engine)`` returning a
+    ``constellation.scheduler.Assignment``; defaults to the contact-plan
+    :class:`~repro.constellation.scheduler.Scheduler` configured from the
+    scenario.
+    """
+
+    def __init__(self, scenario: Scenario, policy=None, seed: int = 0):
+        self.scenario = scenario
+        self.seed = seed
+        self.plan = ContactPlan(scenario.walker, scenario.stations,
+                                horizon=max(2 * scenario.lookahead, 7200.0),
+                                dt=scenario.dt)
+        self.router = Router(scenario.walker, scenario.link)
+        self._blocked: Optional[list] = None
+        self._refresh_blocked()
+        if policy is None:
+            from ..constellation.scheduler import Scheduler  # lazy: no cycle
+            policy = Scheduler(walker=scenario.walker, gs=scenario.stations,
+                               link=scenario.link, k_direct=scenario.k_direct,
+                               n_relay=scenario.n_relay,
+                               compute_time=scenario.compute_time,
+                               lookahead=scenario.lookahead, dt=scenario.dt,
+                               max_hops=scenario.max_hops)
+        self.policy = policy
+
+    # -- contact-plan / weather plumbing ----------------------------------
+    def _refresh_blocked(self) -> None:
+        """Recompute the weather mask aligned with the plan's window arrays.
+
+        Blocked-ness is a DETERMINISTIC hash of (seed, station, sat, window
+        rise time), not a fresh draw — so extending the plan horizon never
+        retroactively flips the availability of a window the simulation
+        already consulted."""
+        if self.scenario.dropout <= 0.0:
+            self._blocked = [None] * self.plan.n_stations
+            return
+        blocked = []
+        n = self.scenario.walker.n_sats
+        sat_ids = np.arange(n, dtype=np.uint64)[:, None]
+        for g, rises in enumerate(self.plan.rises):
+            # window identity: its rise index on the immutable time grid
+            k = np.where(np.isfinite(rises), rises / self.plan.dt, 0.0)
+            k = k.astype(np.uint64)
+            x = (k * np.uint64(0x9E3779B97F4A7C15)
+                 ^ sat_ids * np.uint64(0xBF58476D1CE4E5B9)
+                 ^ np.uint64(((g + 1) * 0x94D049BB133111EB) % 2**64)
+                 ^ np.uint64((self.seed * 2654435761 + 1) % 2**64))
+            # splitmix64 finalizer → uniform in [0, 1)
+            x ^= x >> np.uint64(30)
+            x *= np.uint64(0xBF58476D1CE4E5B9)
+            x ^= x >> np.uint64(27)
+            x *= np.uint64(0x94D049BB133111EB)
+            x ^= x >> np.uint64(31)
+            u = x.astype(np.float64) / float(2**64)
+            blocked.append(u < self.scenario.dropout)
+        self._blocked = blocked
+
+    def ensure(self, t_end: float) -> None:
+        old = self.plan.horizon
+        self.plan.ensure(t_end)
+        if self.plan.horizon != old:
+            self._refresh_blocked()
+
+    def usable_window(self, sat: int, t: float
+                      ) -> Optional[Tuple[float, float, int]]:
+        """Earliest non-blocked window with ``set > t`` across stations."""
+        return self.plan.next_window(sat, t, blocked=self._blocked)
+
+    def usable_windows_all(self, t: np.ndarray
+                           ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+        """Vectorized :meth:`usable_window` over all satellites."""
+        return self.plan.next_windows_all(t, blocked=self._blocked)
+
+    # -- synchronous mode --------------------------------------------------
+    def run_round(self, t0: float, msg_bytes: float) -> RoundResult:
+        sc = self.scenario
+        self.ensure(t0 + 2 * sc.lookahead)
+        asg = self.policy.assign(t0, msg_bytes, self)
+        n = sc.walker.n_sats
+        scheduled = np.zeros(n, dtype=bool)
+        for s in asg.gateways:
+            scheduled[s] = True
+        for s in asg.relays:
+            scheduled[s] = True
+        if not asg.gateways:
+            return RoundResult(np.zeros(n, dtype=bool), sc.max_compute, [],
+                               scheduled, t0)
+
+        gs_tx = sc.link.gs_time(msg_bytes)
+        q: list = []
+        seq = itertools.count()
+
+        def push(t, kind, **kw):
+            heapq.heappush(q, (t, next(seq), kind, kw))
+
+        tx_state = {g: {"queue": [], "busy": False,
+                        "win": asg.windows[g]} for g in asg.gateways}
+        station_free: Dict[int, float] = defaultdict(float)
+        deliveries: List[Delivery] = []
+        hops_of = {s: r.hops for s, r in asg.relays.items()}
+
+        for s in asg.gateways:
+            push(t0 + sc.compute_of(s), "train_done", sat=s)
+        for s in asg.relays:
+            push(t0 + sc.compute_of(s), "train_done", sat=s)
+
+        def try_tx(g, t):
+            st = tx_state[g]
+            if st["busy"] or not st["queue"]:
+                return
+            win = st["win"]
+            for _ in range(64):
+                if win is None:
+                    st["queue"].clear()
+                    st["win"] = None
+                    return                      # undeliverable this round
+                start = max(t, win[0], station_free[win[2]])
+                if start + gs_tx <= win[1]:
+                    break
+                win = self.usable_window(g, win[1])
+            else:
+                st["queue"].clear()
+                st["win"] = None
+                return
+            st["win"] = win
+            if start > t:
+                push(start, "tx_start", gw=g)
+                return
+            _, sat = st["queue"].pop(0)         # FIFO = arrival order
+            st["busy"] = True
+            station_free[win[2]] = t + gs_tx
+            push(t + gs_tx, "tx_done", gw=g, sat=sat, station=win[2])
+
+        while q:
+            t, _, kind, kw = heapq.heappop(q)
+            if kind == "train_done":
+                s = kw["sat"]
+                if s in tx_state:
+                    tx_state[s]["queue"].append((t, s))
+                    try_tx(s, t)
+                else:
+                    r = asg.relays[s]
+                    push(t + r.time, "isl_arrive", sat=s, gw=r.gateway)
+            elif kind == "isl_arrive":
+                tx_state[kw["gw"]]["queue"].append((t, kw["sat"]))
+                try_tx(kw["gw"], t)
+            elif kind == "tx_start":
+                try_tx(kw["gw"], t)
+            elif kind == "tx_done":
+                g, s = kw["gw"], kw["sat"]
+                deliveries.append(Delivery(
+                    sat=s, t_done=t, t_start=t0, gateway=g,
+                    station=kw["station"], hops=hops_of.get(s, 0)))
+                tx_state[g]["busy"] = False
+                try_tx(g, t)
+
+        mask = np.zeros(n, dtype=bool)
+        for d in deliveries:
+            mask[d.sat] = True
+        duration = (max(d.t_done for d in deliveries) - t0
+                    if deliveries else sc.max_compute)
+        return RoundResult(mask, float(duration), deliveries, scheduled, t0)
+
+    # -- asynchronous mode -------------------------------------------------
+    def run_async(self, t0: float, msg_bytes: float, n_deliveries: int,
+                  max_time: Optional[float] = None) -> List[Delivery]:
+        """Free-running constellation: each satellite trains, ships its
+        update (direct or multi-hop ISL), and retrains on delivery.
+
+        Returns the first ``n_deliveries`` deliveries in time order; stops
+        early at ``max_time`` simulated seconds past ``t0`` (default
+        ``100 × lookahead``) if windows run dry.
+        """
+        sc = self.scenario
+        n = sc.walker.n_sats
+        gs_tx = sc.link.gs_time(msg_bytes)
+        horizon_cap = t0 + (max_time if max_time is not None
+                            else 100.0 * sc.lookahead)
+        q: list = []
+        seq = itertools.count()
+
+        def push(t, kind, **kw):
+            heapq.heappush(q, (t, next(seq), kind, kw))
+
+        tx_state = {s: {"queue": [], "busy": False, "win": None}
+                    for s in range(n)}
+        station_free: Dict[int, float] = defaultdict(float)
+        train_start = {s: t0 for s in range(n)}
+        deliveries: List[Delivery] = []
+
+        for s in range(n):
+            push(t0 + sc.compute_of(s), "train_done", sat=s)
+
+        def reachable(sat):
+            """(candidate, hops) within max_hops over the ISL graph."""
+            seen = {sat: 0}
+            frontier = [sat]
+            for h in range(1, sc.max_hops + 1):
+                nxt = []
+                for u in frontier:
+                    for v in self.router.neighbors(u):
+                        if v not in seen:
+                            seen[v] = h
+                            nxt.append(v)
+                frontier = nxt
+            return seen.items()
+
+        def choose_route(sat, t):
+            """Best (gateway, isl_time, hops) by estimated delivery time."""
+            best, best_est = None, np.inf
+            for cand, hops in reachable(sat):
+                isl_t = self.router.link.isl_time(msg_bytes, hops=hops) if hops else 0.0
+                w = self.usable_window(cand, t + isl_t)
+                if w is None:
+                    continue
+                st = tx_state[cand]
+                backlog = (len(st["queue"]) + (1 if st["busy"] else 0)) * gs_tx
+                est = max(t + isl_t, w[0]) + backlog + gs_tx
+                if est < best_est or (est == best_est and best is not None
+                                      and hops < best[2]):
+                    best, best_est = (cand, isl_t, hops), est
+            return best
+
+        def park(st, t):
+            """No usable window for this gateway: re-route the backlog."""
+            for _, parked, _h in st["queue"]:
+                push(min(t + sc.lookahead, horizon_cap), "retry", sat=parked)
+            st["queue"].clear()
+            st["win"] = None
+
+        def try_tx(g, t):
+            st = tx_state[g]
+            if st["busy"] or not st["queue"]:
+                return
+            win = st["win"]
+            if win is None or win[1] <= t:
+                win = self.usable_window(g, t)
+            for _ in range(64):
+                if win is None:
+                    park(st, t)
+                    return
+                start = max(t, win[0], station_free[win[2]])
+                if start + gs_tx <= win[1]:
+                    break
+                win = self.usable_window(g, win[1])
+            else:
+                park(st, t)
+                return
+            st["win"] = win
+            if start > t:
+                push(start, "tx_start", gw=g)
+                return
+            meta = st["queue"].pop(0)
+            st["busy"] = True
+            station_free[win[2]] = t + gs_tx
+            push(t + gs_tx, "tx_done", gw=g, sat=meta[1], hops=meta[2],
+                 station=win[2])
+
+        def dispatch(s, t):
+            route = choose_route(s, t)
+            if route is None:
+                if t < horizon_cap:
+                    push(min(t + sc.lookahead, horizon_cap), "retry", sat=s)
+                return
+            gw, isl_t, hops = route
+            if gw == s:
+                tx_state[s]["queue"].append((t, s, 0))
+                try_tx(s, t)
+            else:
+                push(t + isl_t, "isl_arrive", sat=s, gw=gw, hops=hops)
+
+        while q and len(deliveries) < n_deliveries:
+            t, _, kind, kw = heapq.heappop(q)
+            if t > horizon_cap:
+                break
+            self.ensure(t + 2 * sc.lookahead)
+            if kind == "train_done":
+                dispatch(kw["sat"], t)
+            elif kind == "retry":
+                dispatch(kw["sat"], t)
+            elif kind == "isl_arrive":
+                tx_state[kw["gw"]]["queue"].append((t, kw["sat"], kw["hops"]))
+                try_tx(kw["gw"], t)
+            elif kind == "tx_start":
+                try_tx(kw["gw"], t)
+            elif kind == "tx_done":
+                g, s = kw["gw"], kw["sat"]
+                deliveries.append(Delivery(
+                    sat=s, t_done=t, t_start=train_start[s], gateway=g,
+                    station=kw["station"], hops=kw["hops"]))
+                tx_state[g]["busy"] = False
+                try_tx(g, t)
+                # satellite picks up the fresh global model and retrains
+                train_start[s] = t
+                push(t + sc.compute_of(s), "train_done", sat=s)
+
+        # deliveries are appended in heap-pop order, i.e. sorted by t_done
+        return deliveries[:n_deliveries]

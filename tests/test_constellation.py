@@ -64,6 +64,17 @@ def test_scheduler_progresses_over_time():
     assert union.sum() > masks[0].sum()  # different sats get scheduled
 
 
+def test_scheduler_empty_active_set_when_nothing_visible():
+    """A GS that sees nothing (mask angle ≈ 90°) yields an empty round:
+    no active satellites, but time still advances by the idle duration."""
+    w = Walker(n_sats=20, n_planes=4)
+    s = Scheduler(w, GroundStation(mask_angle=89.9), k_direct=4,
+                  lookahead=3600.0)
+    mask, duration = s.select(0.0, 1e5)
+    assert mask.sum() == 0
+    assert duration > 0
+
+
 def test_link_model_monotone():
     lm = LinkModel()
     assert lm.gs_time(2e6) > lm.gs_time(1e6)

@@ -1,0 +1,110 @@
+"""Contact plans: interval extraction vs brute force, lookups, ISL topology."""
+import numpy as np
+import pytest
+
+from repro.constellation.orbits import (GroundStation, Walker,
+                                        in_plane_neighbors, isl_neighbors,
+                                        visible)
+from repro.sim import ContactPlan
+
+
+def _reconstruct(plan, station, sat, ts):
+    rec = np.zeros(len(ts), dtype=bool)
+    for r, e in plan.windows(station, sat):
+        rec |= (ts >= r) & (ts < e)
+    return rec
+
+
+def test_contact_plan_matches_bruteforce_scan():
+    w = Walker()
+    stations = (GroundStation(), GroundStation(lat=78.23, lon=15.39))
+    dt = 30.0
+    horizon = 2 * w.period
+    plan = ContactPlan(w, stations, horizon=horizon, dt=dt)
+    ts = np.arange(0.0, horizon, dt)
+    for g, gs in enumerate(stations):
+        vis = visible(w, gs, ts)
+        for sat in [0, 3, 17, 42, 99]:
+            np.testing.assert_array_equal(
+                _reconstruct(plan, g, sat, ts), vis[:, sat],
+                err_msg=f"station {g} sat {sat}")
+
+
+def test_next_window_matches_windows_and_horizon():
+    w = Walker(n_sats=20, n_planes=4)
+    plan = ContactPlan(w, (GroundStation(),), horizon=w.period, dt=20.0)
+    for sat in range(0, 20, 3):
+        wins = plan.windows(0, sat)
+        if not wins:
+            assert plan.next_window(sat, 0.0) is None
+            continue
+        r0, e0 = wins[0]
+        got = plan.next_window(sat, 0.0)
+        assert got is not None and got[0] == r0 and got[1] == e0
+        # query inside the window → same window (in contact)
+        mid = 0.5 * (r0 + e0)
+        got = plan.next_window(sat, mid)
+        assert got is not None and got[0] == r0
+        assert plan.in_contact(sat, mid) == 0
+        # query past the last set time → None
+        assert plan.next_window(sat, wins[-1][1] + 1.0) is None or \
+            plan.next_window(sat, wins[-1][1] + 1.0)[0] > wins[-1][1]
+
+
+def test_ensure_extends_horizon():
+    w = Walker(n_sats=20, n_planes=4)
+    plan = ContactPlan(w, (GroundStation(),), horizon=1800.0, dt=20.0)
+    h0 = plan.horizon
+    plan.ensure(4 * h0)
+    assert plan.horizon >= 4 * h0
+    # windows still match brute force after the rebuild
+    ts = np.arange(0.0, plan.horizon, 20.0)
+    vis = visible(w, GroundStation(), ts)
+    np.testing.assert_array_equal(_reconstruct(plan, 0, 5, ts), vis[:, 5])
+
+
+def test_vectorized_lookup_agrees_with_scalar():
+    w = Walker()
+    plan = ContactPlan(w, (GroundStation(), GroundStation(lat=68.32, lon=-133.55)),
+                       horizon=w.period, dt=30.0)
+    for t in [0.0, 777.0, 3000.0]:
+        start, end, station = plan.next_windows_all(t)
+        for sat in [0, 11, 55, 99]:
+            got = plan.next_window(sat, t)
+            if got is None:
+                assert not np.isfinite(start[sat])
+            else:
+                assert start[sat] == pytest.approx(max(got[0], t))
+                assert end[sat] == pytest.approx(got[1])
+                assert station[sat] == got[2]
+
+
+def test_in_plane_wraparound_at_slot_zero():
+    w = Walker(n_sats=100, n_planes=10)
+    # slot 0 wraps to the last slot of the same plane
+    a, b = in_plane_neighbors(w, 0)
+    assert (a, b) == (9, 1)
+    # last slot wraps to slot 0
+    a, b = in_plane_neighbors(w, 9)
+    assert (a, b) == (8, 0)
+    # plane 3, slot 0
+    a, b = in_plane_neighbors(w, 30)
+    assert (a, b) == (39, 31)
+
+
+def test_isl_neighbors_cross_plane_seam():
+    w = Walker(n_sats=100, n_planes=10)
+    nbrs = isl_neighbors(w, 0)          # plane 0, slot 0
+    assert set(nbrs) == {9, 1, 90, 10}  # ring pair + seam plane 9 + plane 1
+    nbrs = isl_neighbors(w, 95)         # plane 9, slot 5 — seam to plane 0
+    assert set(nbrs) == {94, 96, 85, 5}
+    # in-plane only
+    assert set(isl_neighbors(w, 0, cross_plane=False)) == {9, 1}
+
+
+def test_isl_neighbors_degenerate_dedup():
+    w = Walker(n_sats=4, n_planes=2)    # 2 planes, 2 slots: heavy overlap
+    for s in range(4):
+        nbrs = isl_neighbors(w, s)
+        assert s not in nbrs
+        assert len(nbrs) == len(set(nbrs))

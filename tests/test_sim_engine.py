@@ -1,0 +1,261 @@
+"""Discrete-event engine: sync parity with the seed path, corrected relay
+accounting, dropout/empty-round behaviour, async convergence, 1000-sat."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.constellation.links import LinkModel, message_bytes
+from repro.constellation.orbits import GroundStation, Walker
+from repro.constellation.scheduler import Scheduler, legacy_select
+from repro.core.fedlt import FedLT, optimality_error
+from repro.core.fedlt_sat import SpaceRunner
+from repro.data.logistic import generate, make_local_loss, solve_global
+from repro.sim import Engine, Scenario, gateway_schedule, get_scenario
+
+MSG = message_bytes(10000, 10.0)
+
+
+# ---------------------------------------------------------------------------
+# relay accounting (regression for the seed bugs)
+# ---------------------------------------------------------------------------
+
+def test_gateway_schedule_no_double_count():
+    """Each message is charged exactly one gs_tx; ISL transfer that overlaps
+    the window wait adds nothing (the seed charged isl + (i+2)·gs extra)."""
+    gs_tx, isl = 2.0, 0.5
+    window = 100.0
+    # gateway's own update ready at 30; two relays arrive at 30.5, 31.0
+    done = gateway_schedule(window, [(7, 30.0), (3, 30.5), (5, 31.0)], gs_tx)
+    assert done[7] == pytest.approx(window + gs_tx)           # own first
+    assert done[3] == pytest.approx(window + 2 * gs_tx)       # (j+1)·gs only
+    assert done[5] == pytest.approx(window + 3 * gs_tx)
+    # seed formula for relay i: window + isl + (i+2)·gs — strictly larger
+    assert done[3] < window + isl + 2 * gs_tx
+    assert done[5] < window + isl + 3 * gs_tx
+
+
+def test_gateway_schedule_waits_for_late_arrival():
+    gs_tx = 2.0
+    done = gateway_schedule(10.0, [(0, 5.0), (1, 50.0)], gs_tx)
+    assert done[0] == pytest.approx(12.0)
+    assert done[1] == pytest.approx(52.0)      # link idle until arrival
+
+
+def test_n_relay_not_silently_capped_at_two():
+    """The seed sliced a 2-tuple, so n_relay > 2 was impossible.  The
+    multi-hop router reaches n_relay satellites per gateway."""
+    w, gs = Walker(), GroundStation()
+    mask2, _ = Scheduler(w, gs, k_direct=4, n_relay=2).select(0.0, MSG)
+    mask4, _ = Scheduler(w, gs, k_direct=4, n_relay=4).select(0.0, MSG)
+    assert mask2.sum() == 4 * 3                # gateways + 2 relays each
+    assert mask4.sum() == 4 * 5                # gateways + 4 relays each
+    assert mask4.sum() > 12                    # impossible in the seed
+
+
+def test_engine_deliveries_match_analytic_gateway_schedule():
+    """The engine's event-loop serialization IS the corrected accounting:
+    on a single-gateway round (no cross-gateway contention) every delivery
+    time equals the analytic :func:`gateway_schedule` prediction."""
+    sc = Scenario(name="one-gw", walker=Walker(), stations=(GroundStation(),),
+                  k_direct=1, n_relay=4)
+    eng = Engine(sc)
+    asg = eng.policy.assign(0.0, MSG, eng)
+    res = eng.run_round(0.0, MSG)
+    (g,) = asg.gateways
+    arrivals = [(g, sc.compute_of(g))]
+    arrivals += [(s, sc.compute_of(s) + r.time) for s, r in asg.relays.items()]
+    window_start = asg.windows[g][0]
+    expected = gateway_schedule(max(window_start, 0.0), arrivals,
+                                sc.link.gs_time(MSG))
+    got = {d.sat: d.t_done for d in res.deliveries}
+    assert set(got) == set(expected)
+    for sat, t_exp in expected.items():
+        assert got[sat] == pytest.approx(t_exp), sat
+
+
+def test_relays_are_multi_hop():
+    sched = Scheduler(Walker(), GroundStation(), k_direct=2, n_relay=6,
+                      max_hops=4)
+    eng = sched._engine()
+    asg = sched.assign(0.0, MSG, eng)
+    hops = [r.hops for r in asg.relays.values()]
+    assert max(hops) > 1                       # beyond in-plane neighbours
+    assert all(1 <= h <= 4 for h in hops)
+
+
+# ---------------------------------------------------------------------------
+# synchronous mode: parity with the seed SpaceRunner on Walker/Kiruna
+# ---------------------------------------------------------------------------
+
+def test_sync_parity_with_seed_round_durations():
+    """Engine sync mode reproduces the seed per-round loop on the default
+    Walker/Kiruna scenario: identical active-set sizes and the same round
+    durations up to grid/accounting slack (the corrected accounting shifts
+    individual rounds by ≤ compute + dt; cumulative time must agree)."""
+    w, gs, link = Walker(), GroundStation(), LinkModel()
+    sched = Scheduler(w, gs, k_direct=4, n_relay=2)
+    t_new = t_old = 0.0
+    d_new, d_old, a_new, a_old = [], [], [], []
+    for _ in range(12):
+        m, d = sched.select(t_new, MSG)
+        t_new += d
+        d_new.append(d)
+        a_new.append(int(m.sum()))
+        m, d = legacy_select(w, gs, link, t_old, MSG)
+        t_old += d
+        d_old.append(d)
+        a_old.append(int(m.sum()))
+    assert a_new == a_old
+    # same duration distribution up to scheduling slack (rounds may swap
+    # order by one when a window straddles the compute interval)
+    np.testing.assert_allclose(sorted(d_new), sorted(d_old), atol=35.0)
+    assert abs(t_new - t_old) / t_old < 0.05
+
+
+def test_engine_round_mask_matches_schedule_without_dropout():
+    eng = Engine(get_scenario("walker-kiruna"))
+    res = eng.run_round(0.0, MSG)
+    np.testing.assert_array_equal(res.mask, res.scheduled)
+    assert len(res.deliveries) == res.mask.sum()
+    assert res.duration >= max(d.t_done for d in res.deliveries) - res.t0
+
+
+# ---------------------------------------------------------------------------
+# edge cases: empty rounds, dropout, heterogeneous compute, multi-station
+# ---------------------------------------------------------------------------
+
+def _blind_scenario(**kw):
+    return Scenario(name="blind", walker=Walker(n_sats=20, n_planes=4),
+                    stations=(GroundStation(mask_angle=89.9),),
+                    lookahead=3600.0, **kw)
+
+
+def test_no_visible_satellite_round_advances_time():
+    eng = Engine(_blind_scenario())
+    t = 0.0
+    for _ in range(3):
+        res = eng.run_round(t, MSG)
+        assert res.mask.sum() == 0
+        assert res.duration > 0
+        t += res.duration
+    assert t > 0
+
+
+def test_async_no_windows_terminates_empty():
+    eng = Engine(_blind_scenario())
+    assert eng.run_async(0.0, MSG, n_deliveries=5, max_time=20000.0) == []
+
+
+def test_full_dropout_delivers_nothing():
+    sc = Scenario(name="storm", walker=Walker(n_sats=20, n_planes=4),
+                  stations=(GroundStation(),), dropout=1.0, lookahead=3600.0)
+    res = Engine(sc).run_round(0.0, MSG)
+    assert res.mask.sum() == 0
+
+
+def test_dropout_mask_stable_across_plan_extension():
+    """Weather blocked-ness is a deterministic hash of the window identity:
+    extending the plan horizon must not retroactively flip the availability
+    of windows the simulation already consulted."""
+    eng = Engine(get_scenario("weather-dropout"), seed=3)
+    before_b = [b.copy() for b in eng._blocked]
+    before_r = [r.copy() for r in eng.plan.rises]
+    eng.ensure(4 * eng.plan.horizon)
+    assert eng._blocked[0].shape[1] > before_b[0].shape[1]   # plan grew
+    for g in range(len(before_b)):
+        w = min(before_b[g].shape[1], eng._blocked[g].shape[1])
+        keep = (np.isfinite(before_r[g][:, :w])
+                & np.isfinite(eng.plan.rises[g][:, :w]))
+        np.testing.assert_array_equal(before_r[g][:, :w][keep],
+                                      eng.plan.rises[g][:, :w][keep])
+        np.testing.assert_array_equal(before_b[g][:, :w][keep],
+                                      eng._blocked[g][:, :w][keep])
+
+
+def test_partial_dropout_still_delivers():
+    res = Engine(get_scenario("weather-dropout"), seed=3).run_round(0.0, MSG)
+    assert res.mask.sum() >= 1
+    clear = Engine(get_scenario("dual-station")).run_round(0.0, MSG)
+    assert res.duration >= 0 and clear.duration >= 0
+
+
+def test_hetero_compute_and_dual_station():
+    res = Engine(get_scenario("hetero-compute")).run_round(0.0, MSG)
+    assert res.mask.sum() >= 1
+    eng = Engine(get_scenario("dual-station"))
+    stations = set()
+    t = 0.0
+    for _ in range(8):
+        r = eng.run_round(t, MSG)
+        stations |= {d.station for d in r.deliveries}
+        t += r.duration
+    assert stations <= {0, 1} and stations
+
+
+# ---------------------------------------------------------------------------
+# asynchronous mode
+# ---------------------------------------------------------------------------
+
+def test_async_deliveries_are_ordered_and_retrain():
+    eng = Engine(get_scenario("walker-kiruna"))
+    ds = eng.run_async(0.0, MSG, n_deliveries=120)
+    assert len(ds) == 120
+    ts = [d.t_done for d in ds]
+    assert ts == sorted(ts)
+    # at least one satellite delivered twice — trained again after delivery
+    sats = [d.sat for d in ds]
+    assert len(set(sats)) < len(sats)
+    again = [d for d in ds if sats.count(d.sat) > 1]
+    assert any(d.t_start > 0.0 for d in again)
+
+
+def _small_problem(n_agents=20, dim=30):
+    data, _ = generate(jax.random.PRNGKey(0), n_agents=n_agents, m=60, dim=dim)
+    loss = make_local_loss(eps=50.0, n_agents=n_agents)
+    x_star = solve_global(data, eps=50.0)
+    sc = Scenario(name="small", walker=Walker(n_sats=n_agents, n_planes=4),
+                  stations=(GroundStation(),), k_direct=3, n_relay=2)
+    return data, loss, x_star, sc
+
+
+def test_async_mode_converges_on_logistic_task():
+    data, loss, x_star, sc = _small_problem()
+    alg = FedLT(loss=loss, n_epochs=10, gamma=0.005, rho=20.0)
+    st = alg.init(jnp.zeros((30,)), 20)
+    runner = SpaceRunner(Engine(sc), wire_bits=32.0, mode="async",
+                         buffer_size=5, staleness_alpha=0.5)
+    err = lambda s: float(optimality_error(s.x, x_star))
+    e0 = err(st)
+    st, logs = runner.run(alg, st, data, 40, jax.random.PRNGKey(2),
+                          error_fn=err, log_every=10)
+    assert logs, "async produced no aggregation rounds"
+    assert logs[-1].error < 0.6 * e0
+    # staleness is tracked and non-negative; buffer bound respected
+    assert all(l.staleness is not None and l.staleness >= 0 for l in logs)
+    assert all(l.n_active <= 5 for l in logs)
+    assert all(l.time > 0 for l in logs)
+
+
+def test_sync_and_async_runners_agree_on_bytes_accounting():
+    data, loss, x_star, sc = _small_problem()
+    alg = FedLT(loss=loss, n_epochs=5, gamma=0.005, rho=20.0)
+    st = alg.init(jnp.zeros((30,)), 20)
+    runner = SpaceRunner(Engine(sc), wire_bits=32.0)
+    st, logs = runner.run(alg, st, data, 4, jax.random.PRNGKey(0))
+    msg = message_bytes(30, 32.0)
+    assert logs[-1].bytes_up == pytest.approx(
+        sum(l.n_active for l in logs) * msg)
+
+
+# ---------------------------------------------------------------------------
+# scale
+# ---------------------------------------------------------------------------
+
+def test_engine_runs_thousand_satellite_scenario():
+    eng = Engine(get_scenario("mega-1000"))
+    assert eng.scenario.walker.n_sats == 1000
+    res = eng.run_round(0.0, MSG)
+    assert res.mask.sum() >= eng.scenario.k_direct
+    ds = eng.run_async(0.0, MSG, n_deliveries=50)
+    assert len(ds) == 50
