@@ -28,7 +28,7 @@ def main() -> None:
             failures.append(name)
 
     from . import fig4_trajectory, kernel_bench, sim_scale, table1_error_feedback
-    from . import roofline, table2_space_comparison
+    from . import roofline, table2_space_comparison, wire_bench
 
     section("Table 1: error feedback ablation",
             lambda: table1_error_feedback.main(quick=quick))
@@ -39,6 +39,8 @@ def main() -> None:
     section("Sim scaling: contact plan + 1000-sat engine",
             lambda: sim_scale.main(quick=quick))
     section("Kernel micro-benchmarks", kernel_bench.main)
+    section("Wire codec bench: pack throughput + byte accounting",
+            lambda: wire_bench.main(tiny=quick))
     section("Roofline (dry-run aggregation)", roofline.main)
 
     if failures:

@@ -46,7 +46,7 @@ def run(mc_runs=2, rounds=400, scale=1.0, verbose=True):
                 data, loss, xbar, n_agents = problem(seed=mc, scale=scale)
                 alg = make_algorithm(algo, loss, C, ef=True)
                 st = alg.init(jnp.zeros((xbar.shape[0],)), n_agents)
-                runner = SpaceRunner(engine, wire_bits=C.wire_bits_per_scalar())
+                runner = SpaceRunner(engine, compressor=C)
                 st, logs = runner.run(alg, st, data, rounds,
                                       jax.random.PRNGKey(200 + mc))
                 errs.append(float(optimality_error(st.x, xbar)))

@@ -1,0 +1,104 @@
+"""Wire codec benchmark: pack/unpack throughput + measured-vs-nominal bytes.
+
+Two measurements (ISSUE 2 tentpole, ROADMAP speed north-star):
+
+  1. **Kernel throughput** — ``pack_bits``/``unpack_bits`` (interpret mode
+     everywhere; compiled Pallas additionally when a TPU backend is
+     present) across sizes and bit widths, reported as value-side MB/s.
+  2. **Byte accounting** — measured ``WireMessage.nbytes`` per compressor
+     vs the nominal ``wire_bits_per_scalar`` estimate: the ratio is the
+     real header+padding overhead the simulator now accounts for.
+
+Run:  PYTHONPATH=src python benchmarks/wire_bench.py [--tiny]
+``--tiny`` (CI smoke): smallest sizes, one repetition, interpret only —
+fails fast on any pack/unpack regression.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.compression import (Identity, RandD, ScaledSign, TopK,
+                                    UniformQuantizer)
+from repro.kernels.pack_bits import pack_bits, unpack_bits
+from repro.wire import codec_for, measure_tree_bytes
+
+
+def _time(fn, reps):
+    fn()                                    # warmup / compile
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        jax.block_until_ready(fn())
+    return (time.perf_counter() - t0) / reps
+
+
+def bench_kernels(sizes, bit_widths, reps, modes):
+    print(f"{'mode':10s} {'n':>9s} {'bits':>4s} {'pack MB/s':>10s} "
+          f"{'unpack MB/s':>12s}")
+    for interpret in modes:
+        mode = "interpret" if interpret else "compiled"
+        for n in sizes:
+            for bits in bit_widths:
+                x = jax.random.randint(jax.random.PRNGKey(0), (n,), 0,
+                                       2 ** min(bits, 30)).astype(jnp.uint32)
+                words = pack_bits(x, bits, interpret=interpret)
+                t_pack = _time(lambda: pack_bits(x, bits,
+                                                 interpret=interpret), reps)
+                t_unpack = _time(lambda: unpack_bits(words, bits, n,
+                                                     interpret=interpret),
+                                 reps)
+                back = unpack_bits(words, bits, n, interpret=interpret)
+                assert np.array_equal(np.asarray(back), np.asarray(x)), (
+                    f"round-trip broke: n={n} bits={bits} mode={mode}")
+                mb = 4.0 * n / 1e6
+                print(f"{mode:10s} {n:9d} {bits:4d} {mb / t_pack:10.1f} "
+                      f"{mb / t_unpack:12.1f}")
+
+
+def bench_accounting(n):
+    compressors = {
+        "identity": Identity(),
+        "quant_fine": UniformQuantizer(levels=1000, vmin=-10, vmax=10,
+                                       clip=True),
+        "quant_coarse": UniformQuantizer(levels=10, vmin=-1, vmax=1,
+                                         clip=True),
+        "sign": ScaledSign(),
+        "top_0.1": TopK(fraction=0.1),
+        "rand_0.5": RandD(fraction=0.5),
+    }
+    print(f"\n{'compressor':14s} {'nominal b/s':>11s} {'measured b/s':>13s} "
+          f"{'ratio':>7s}")
+    x = jax.random.normal(jax.random.PRNGKey(1), (n,))
+    for name, C in compressors.items():
+        y = C(jax.random.PRNGKey(2), x)
+        measured = measure_tree_bytes(C, y)
+        nominal_bs = C.wire_bits_per_scalar()
+        measured_bs = 8.0 * measured / n
+        print(f"{name:14s} {nominal_bs:11.2f} {measured_bs:13.3f} "
+              f"{measured_bs / nominal_bs:7.3f}")
+
+
+def main(tiny: bool = False):
+    t0 = time.time()
+    if tiny:
+        sizes, bit_widths, reps = [4096, 40000], [1, 4, 10], 1
+    else:
+        sizes, bit_widths, reps = [65536, 1 << 20, 1 << 22], [1, 4, 8, 16], 5
+    modes = [True]
+    if jax.default_backend() == "tpu":
+        modes.append(False)        # compiled Pallas on the TPU backend
+    bench_kernels(sizes, bit_widths, reps, modes)
+    bench_accounting(4096 if tiny else 1 << 20)
+    us = (time.time() - t0) * 1e6
+    print(f"\nwire_bench,{us:.0f},modes={len(modes)}")
+
+
+if __name__ == "__main__":
+    p = argparse.ArgumentParser(description=__doc__)
+    p.add_argument("--tiny", action="store_true",
+                   help="CI smoke: small sizes, 1 rep, interpret only")
+    main(tiny=p.parse_args().tiny)

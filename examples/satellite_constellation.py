@@ -51,7 +51,7 @@ def main(rounds=120):
     engine = Engine(get_scenario("walker-kiruna"))
     for name, alg in algs.items():
         st = alg.init(jnp.zeros((dim,)), n_agents)
-        runner = SpaceRunner(engine, wire_bits=quant.wire_bits_per_scalar())
+        runner = SpaceRunner(engine, compressor=quant)
         st, logs = runner.run(alg, st, data, rounds, jax.random.PRNGKey(2),
                               error_fn=lambda s: optimality_error(s.x, x_star),
                               log_every=20)
@@ -61,7 +61,7 @@ def main(rounds=120):
     alg = algs["Fed-LTSat"]
     st = alg.init(jnp.zeros((dim,)), n_agents)
     runner = SpaceRunner(Engine(get_scenario("dual-station")),
-                         wire_bits=quant.wire_bits_per_scalar(),
+                         compressor=quant,
                          mode="async", buffer_size=10, staleness_alpha=0.5)
     st, logs = runner.run(alg, st, data, rounds, jax.random.PRNGKey(3),
                           error_fn=lambda s: optimality_error(s.x, x_star),

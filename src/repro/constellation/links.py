@@ -1,4 +1,16 @@
-"""Link budget / transmission-time model for GS and inter-satellite links."""
+"""Link budget / transmission-time model for GS and inter-satellite links.
+
+Transmission times are pure functions of on-wire bytes.  Two ways to get
+the byte count:
+
+* :func:`message_bytes` — *nominal* estimate from a compressor's
+  ``wire_bits_per_scalar`` (payload only, no headers);
+* a measured :class:`repro.wire.WireMessage` — pass its exact ``nbytes``
+  into :meth:`LinkModel.gs_time` / :meth:`LinkModel.isl_time`.
+
+The simulator (``repro.sim.engine``) and :class:`repro.core.fedlt_sat.
+SpaceRunner` use measured bytes whenever the compressor has a wire codec.
+"""
 from __future__ import annotations
 
 import dataclasses
@@ -20,5 +32,6 @@ class LinkModel:
 
 
 def message_bytes(n_params: int, bits_per_scalar: float) -> float:
-    """On-wire size of one model update under a given compressor."""
+    """Nominal on-wire size of one model update under a given compressor
+    (payload-only estimate; exact sizes come from ``repro.wire``)."""
     return n_params * bits_per_scalar / 8.0

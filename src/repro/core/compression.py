@@ -17,16 +17,32 @@ Implemented:
 For the deploy path (real wire-bytes savings across the slow inter-pod
 link), :func:`quantize_encode` / :func:`quantize_decode` provide the integer
 on-wire codec matching :class:`UniformQuantizer`.
+
+Exact on-wire serialization (bit-packed words + headers, paper §2.4) lives
+in :mod:`repro.wire`: ``compressor.wire_codec()`` returns the matching
+codec, and ``wire_bits_per_scalar`` remains the *nominal* payload estimate
+the codecs are measured against (see ``benchmarks/wire_bench.py``).
 """
 from __future__ import annotations
 
 import dataclasses
+import math
 from typing import Optional
 
 import jax
 import jax.numpy as jnp
 
 from .pytree import tree_map, tree_split_keys
+
+
+def wire_index_bits(levels: int) -> int:
+    """Bit width of a uniform-quantizer level index: ceil(log2(L+1)).
+
+    Single source of truth for the levels→bits mapping shared by
+    :meth:`UniformQuantizer.wire_bits_per_scalar`, the wire codec's
+    packing width, and the deploy-path gather width.
+    """
+    return max(1, math.ceil(math.log2(levels + 1)))
 
 
 class Compressor:
@@ -47,10 +63,28 @@ class Compressor:
     def wire_bits_per_scalar(self) -> float:
         """Nominal on-wire cost (bits per tensor element) of this compressor.
 
-        Used by the constellation link model to convert messages to
-        transmission times.
+        Payload-only estimate (no headers); the exact measured size comes
+        from :meth:`wire_codec` — see :mod:`repro.wire`.
         """
         return 32.0
+
+    def wire_codec(self, interpret: Optional[bool] = None):
+        """Exact on-wire codec for this compressor (None if it has no
+        real serialization — then only the nominal estimate exists).
+
+        The codec's round-trip is bit-exact w.r.t. the compressor's float
+        output, with one caveat: a ``UniformQuantizer(clip=False)`` can
+        emit lattice points outside [vmin, vmax] that have no on-wire
+        index — the codec clamps them (byte accounting is still exact);
+        use ``clip=True`` wherever lossless decode matters.
+        """
+        from ..wire.codecs import codec_for  # lazy: wire imports this module
+        return codec_for(self, interpret=interpret)
+
+    def wire_header_nbytes(self, ndim: int = 1) -> int:
+        """Exact per-leaf header overhead of this compressor's codec."""
+        codec = self.wire_codec()
+        return 0 if codec is None else codec.leaf_header_nbytes(ndim)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -85,8 +119,9 @@ class UniformQuantizer(Compressor):
         return q.astype(x.dtype)
 
     def wire_bits_per_scalar(self) -> float:
-        # level indices need ceil(log2(L+1)) bits (+ negligible scale scalars)
-        return float(max(1, int(jnp.ceil(jnp.log2(self.levels + 1)))))
+        # static int arithmetic stays host-side (math, not jnp — no
+        # tracer/device round-trip)
+        return float(wire_index_bits(self.levels))
 
 
 @dataclasses.dataclass(frozen=True)
@@ -105,8 +140,9 @@ class RandD(Compressor):
         d = max(1, int(round(self.fraction * n)))
         # exactly-d mask: rank i.i.d. uniforms, keep the d smallest.
         u = jax.random.uniform(key, (n,))
-        # threshold = d-th smallest value
-        kth = jnp.sort(u)[d - 1]
+        # threshold = d-th smallest value; top_k of the negation is
+        # O(n log d) — the full sort only ever fed this one statistic
+        kth = -jax.lax.top_k(-u, d)[0][d - 1]
         mask = (u <= kth).reshape(x.shape)
         return jnp.where(mask, x, 0).astype(x.dtype)
 
@@ -126,7 +162,8 @@ class TopK(Compressor):
         k = max(1, int(round(self.fraction * n)))
         flat = x.reshape(-1)
         mag = jnp.abs(flat)
-        kth = jnp.sort(mag)[n - k]
+        # threshold = k-th largest |x|: top_k selection, not a full sort
+        kth = jax.lax.top_k(mag, k)[0][k - 1]
         mask = mag >= kth
         return jnp.where(mask.reshape(x.shape), x, 0).astype(x.dtype)
 
@@ -136,11 +173,19 @@ class TopK(Compressor):
 
 @dataclasses.dataclass(frozen=True)
 class ScaledSign(Compressor):
-    """C(x) = (‖x‖₁/n)·sign(x) — 1 bit/coordinate + one scale."""
+    """C(x) = (‖x‖₁/n)·sign(x) — 1 bit/coordinate + one scale.
+
+    Uses the binarized signSGD convention ``sign(0) := +1`` so every
+    output coordinate is exactly ±scale and the 1-bit wire codec
+    (:class:`repro.wire.SignCodec`) round-trips it losslessly.  The
+    contraction bound is unchanged: ‖C(x)−x‖² = ‖x‖² − (‖x‖₁)²/n ≤ ‖x‖²
+    holds for either convention since zero coordinates contribute 0 to
+    x·sign(x).
+    """
 
     def compress_leaf(self, key, x):
         scale = jnp.mean(jnp.abs(x))
-        return (scale * jnp.sign(x)).astype(x.dtype)
+        return (scale * jnp.where(x >= 0, 1.0, -1.0)).astype(x.dtype)
 
     def wire_bits_per_scalar(self) -> float:
         return 1.0
@@ -176,6 +221,24 @@ def quantize_decode(idx, levels: int, vmin: float, vmax: float, dtype=jnp.float3
 
 
 def make_compressor(name: str, **kw) -> Compressor:
+    """Build a compressor by name; every returned compressor carries a
+    wire codec (``.wire_codec()``) with exact byte accounting and these
+    header overheads (round-trip is bit-exact except for ``quant`` with
+    ``clip=False``, whose out-of-range lattice points the wire clamps):
+
+    ============  =======  ==============================================
+    name          codec    exact per-leaf header (4 + 4·ndim base bytes +)
+    ============  =======  ==============================================
+    identity      dense    +0
+    quant         quant    +12  (levels u32, vmin f32, vmax f32)
+    sign          sign     +4   (scale f32)
+    top_k/rand_d  sparse   +4   (k u32)
+    ============  =======  ==============================================
+
+    plus an 8-byte per-message header; query exact numbers with
+    ``make_compressor(name).wire_header_nbytes(ndim)`` — the simulator's
+    byte accounting uses these, not the nominal ``wire_bits_per_scalar``.
+    """
     table = {
         "identity": Identity,
         "quant": UniformQuantizer,

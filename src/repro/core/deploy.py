@@ -10,7 +10,11 @@ runs inside the step:
   2. z ← z + 2(x − ŷ)
   3. uplink: wire = Q(z + c_up) as *integer* level indices — the cross-agent
      all-gather moves int8/int16, which is the actual wire saving of the
-     paper's compression, visible in the dry-run HLO     (uplink EF)
+     paper's compression, visible in the dry-run HLO     (uplink EF);
+     with ``pack_wire=True`` the indices are further bit-packed into
+     b-bit uint32 wire words (``repro.wire`` layout, Pallas kernels in
+     ``repro.kernels.pack_bits``) so the gather moves the exact on-wire
+     payload
   4. ȳ = mean_A decode(wire);  y = c_down + ȳ
   5. ŷ = decode(Q(y));  c_down = y − ŷ                      (downlink EF)
 
@@ -27,8 +31,10 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
-from ..core.compression import quantize_decode, quantize_encode
+from ..core.compression import (quantize_decode, quantize_encode,
+                                wire_index_bits)
 from ..core.pytree import tree_map
+from ..kernels.pack_bits import _TILE_VALS, pack_bits, unpack_bits
 from ..models.transformer import init_params, lm_loss
 
 
@@ -57,7 +63,18 @@ class DeployFedLT:
     vmin: float = -1.0
     vmax: float = 1.0
     compress: bool = True
+    # pack the uplink ints into b-bit uint32 wire words (repro.wire layout,
+    # Pallas kernels) before the cross-agent gather — the collective then
+    # moves b = ceil(log2(levels+1)) bits/scalar instead of the container
+    # dtype's 8/16.  Leaves smaller than one kernel tile (32768 values)
+    # gather as plain ints: there the tile padding would exceed the
+    # packing saving.
+    pack_wire: bool = False
     backend: str = "chunked"
+
+    @property
+    def wire_word_bits(self) -> int:
+        return wire_index_bits(self.levels)
 
     # -- state ------------------------------------------------------------
     def init(self, key, n_agents: int) -> DeployState:
@@ -110,8 +127,30 @@ class DeployFedLT:
                 lambda w, m: quantize_decode(w, self.levels, self.vmin,
                                              self.vmax, m.dtype), wire, msg)
             c_up_new = tree_map(jnp.subtract, msg, decoded)
-            # replicate the agent dim of the INT tensor (all-gather of int8)
-            if agent_replicate_spec is not None:
+            if self.pack_wire:
+                bits = self.wire_word_bits
+                interp = jax.default_backend() != "tpu"
+
+                def gather_leaf(w, spec):
+                    # pack only tile-sized leaves: below _TILE_VALS the
+                    # kernel's tile padding would outweigh the b-bit
+                    # saving and the gather would move MORE bytes
+                    if w.size < _TILE_VALS:
+                        if spec is not None:
+                            w = jax.lax.with_sharding_constraint(w, spec)
+                        return w
+                    p = pack_bits(w, bits, interpret=interp)
+                    if spec is not None:
+                        p = jax.lax.with_sharding_constraint(p, P(None))
+                    return unpack_bits(p, bits, w.size, interpret=interp
+                                       ).astype(w.dtype).reshape(w.shape)
+
+                if agent_replicate_spec is None:
+                    wire = tree_map(lambda w: gather_leaf(w, None), wire)
+                else:
+                    wire = tree_map(gather_leaf, wire, agent_replicate_spec)
+            elif agent_replicate_spec is not None:
+                # replicate the agent dim of the INT tensor (int8 gather)
                 wire = jax.lax.with_sharding_constraint(wire, agent_replicate_spec)
             gathered = tree_map(
                 lambda w, m: quantize_decode(w, self.levels, self.vmin,
@@ -136,4 +175,12 @@ class DeployFedLT:
         new_state = DeployState(x=x_new, z=z_new, c_up=c_up_new, y_hat=y_hat,
                                 c_down=c_down_new, k=state.k + 1)
         metrics = {"loss": jnp.mean(last_loss)}
+        if self.compress:
+            # exact measured uplink size per agent under the wire codec
+            # (static shapes → a compile-time constant in the metrics)
+            from ..wire.codecs import QuantCodec
+            codec = QuantCodec(self.levels, self.vmin, self.vmax)
+            template = tree_map(lambda x: x[0], state.x)
+            metrics["wire_nbytes_per_agent"] = jnp.float32(
+                codec.tree_nbytes(template))
         return new_state, metrics

@@ -36,7 +36,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..constellation.links import message_bytes
-from .pytree import tree_map, tree_size
+from .compression import Compressor
+from .pytree import tree_map, tree_size, tree_split_keys
 
 
 @dataclasses.dataclass
@@ -59,10 +60,11 @@ class SpaceRunner:
     """
 
     engine: object
-    wire_bits: float = 32.0      # per-scalar uplink size (compressor-dependent)
+    wire_bits: float = 32.0      # nominal fallback (no-codec compressors)
     mode: str = "sync"           # "sync" | "async"
     buffer_size: int = 8         # async: aggregate every M landed updates
     staleness_alpha: float = 0.5  # async: wire weight (1+s)^(-alpha)
+    compressor: Optional[Compressor] = None  # → measured WireMessage bytes
 
     def __post_init__(self):
         if hasattr(self.engine, "select") and not hasattr(self.engine, "run_round"):
@@ -72,6 +74,29 @@ class SpaceRunner:
 
     # -- shared setup ------------------------------------------------------
     def _msg_bytes(self, state) -> float:
+        """On-wire size of one per-agent update.
+
+        With a ``compressor`` whose wire codec exists, one representative
+        per-agent message is actually encoded (``repro.wire``) and the
+        exact ``WireMessage.nbytes`` — bit-packed payload + headers —
+        drives every engine transmission time and ``bytes_up`` log.  The
+        nominal ``wire_bits`` estimate is only the fallback for
+        compressors without a codec.
+        """
+        if self.compressor is not None and \
+                self.compressor.wire_codec() is not None:
+            from ..wire import measure_tree_bytes  # lazy: wire imports core
+            # encode one representative message: a random probe with the
+            # per-agent shapes, run through the compressor (zeros — e.g.
+            # the init state — would make sparse codecs count an empty
+            # payload)
+            template = tree_map(lambda x: x[0], state.x)
+            keys = tree_split_keys(jax.random.PRNGKey(0), template)
+            probe = tree_map(
+                lambda k_, t: jax.random.normal(k_, t.shape, t.dtype),
+                keys, template)
+            wire = self.compressor(jax.random.PRNGKey(1), probe)
+            return measure_tree_bytes(self.compressor, wire)
         n_params = tree_size(state.x) // jax.tree_util.tree_leaves(
             state.x)[0].shape[0]
         return message_bytes(n_params, self.wire_bits)
@@ -97,7 +122,8 @@ class SpaceRunner:
             active_np = res.mask
             state, _ = round_fn(state, data, jnp.asarray(active_np), keys[k])
             t += res.duration
-            up_bytes += float(active_np.sum()) * msg
+            # bytes_up = what actually crossed the GS links this round
+            up_bytes += sum(d.nbytes for d in res.deliveries)
             err = (float(error_fn(state))
                    if error_fn is not None and (k % log_every == 0
                                                 or k == n_rounds - 1) else None)
@@ -135,7 +161,7 @@ class SpaceRunner:
                                 jnp.asarray(weights))
             t = chunk[-1].t_done
             agg_times.append(t)
-            up_bytes += len(chunk) * msg
+            up_bytes += sum(d.nbytes for d in chunk)
             err = (float(error_fn(state))
                    if error_fn is not None and (k % log_every == 0
                                                 or k == n_rounds - 1) else None)

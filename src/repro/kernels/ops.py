@@ -10,11 +10,27 @@ import jax.numpy as jnp
 
 from . import ref
 from .flash_attention import flash_attention as _flash
+from .pack_bits import pack_bits as _pack_bits
+from .pack_bits import unpack_bits as _unpack_bits
 from .quantize_ef import quantize_ef as _quant_ef
 
 
 def _interpret() -> bool:
     return jax.default_backend() != "tpu"
+
+
+def pack_bits(x, bits: int, *, use_pallas: bool = True):
+    """Pack b-bit values into uint32 wire words (repro.wire layout)."""
+    if not use_pallas:
+        return ref.pack_bits_ref(x, bits)
+    return _pack_bits(x, bits, interpret=_interpret())
+
+
+def unpack_bits(words, bits: int, n: int, *, use_pallas: bool = True):
+    """Inverse of :func:`pack_bits`: first ``n`` values, flat uint32."""
+    if not use_pallas:
+        return ref.unpack_bits_ref(words, bits, n)
+    return _unpack_bits(words, bits, n, interpret=_interpret())
 
 
 def quantize_ef(msg, cache, *, levels=255, vmin=-0.25, vmax=0.25,

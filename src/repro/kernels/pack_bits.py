@@ -1,0 +1,126 @@
+"""Pallas bit-pack / bit-unpack kernels for the on-wire codec layer.
+
+The wire subsystem (``repro.wire``, paper §2.4) serializes compressor
+outputs into the exact bytes that cross a sat↔GS link: b-bit quantization
+indices, 1-bit signs, and sparse coordinate indices are all packed into
+dense ``uint32`` words.  These kernels are the hot path of that layer —
+companions to :mod:`repro.kernels.quantize_ef` — and run the packing as a
+single VMEM sweep (read values, write words; strictly memory-bound).
+
+Wire word layout (transposed bit-plane packing)
+-----------------------------------------------
+Values are processed in groups of 32; a group of 32 b-bit values packs
+into exactly b ``uint32`` words, with **bit j of value i stored at bit
+position i of word j**.  This layout
+
+  * supports ANY bit width 1 ≤ b ≤ 32 with no value ever straddling a
+    word boundary,
+  * is pure element-wise shift/mask VPU work (no gathers, no cross-lane
+    shuffles): the reduction over the 32 group members runs along the
+    sublane axis of a (32·R, 128) tile.
+
+Within one grid step the kernel sees a ``(32·R, LANES)`` value tile and
+writes a ``(b·R, LANES)`` word tile; value ``i`` of group ``(r, lane)``
+lives at row ``i·R + r`` and its word ``j`` at row ``j·R + r``.  The flat
+padded value index is therefore
+
+    v_idx = ((tile·32 + i)·R + r)·LANES + lane
+
+Both ends of the wire use the same layout, so the interleaving is
+invisible to callers: ``unpack_bits(pack_bits(x, b), b, n) == x`` exactly
+whenever ``x < 2**b``.  Tile padding is memory-layout only — the logical
+on-wire size is ``ceil(n/32)·b`` words, which is what
+:class:`repro.wire.message.WireMessage` accounts.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+LANES = 128     # VPU lane width
+GROUP = 32      # values per packed group (= bits per uint32 word)
+R = 8           # groups stacked per sublane block (tile rows = 32·R)
+
+_TILE_VALS = GROUP * R * LANES
+
+
+def _check_bits(bits: int) -> None:
+    if not (1 <= int(bits) <= 32):
+        raise ValueError(f"bit width must be in [1, 32], got {bits}")
+
+
+def logical_words(n: int, bits: int) -> int:
+    """On-wire ``uint32`` word count for ``n`` b-bit values (no tile pad)."""
+    _check_bits(bits)
+    return -(-n // GROUP) * bits
+
+
+def _pack_kernel(vals_ref, words_ref, *, bits):
+    v = vals_ref[...]                                  # (32·R, LANES) uint32
+    for j in range(bits):
+        w = jnp.zeros((R, LANES), jnp.uint32)
+        for i in range(GROUP):
+            w = w | (((v[i * R:(i + 1) * R, :] >> j) & 1) << i)
+        words_ref[j * R:(j + 1) * R, :] = w
+
+
+def _unpack_kernel(words_ref, vals_ref, *, bits):
+    w = words_ref[...]                                 # (b·R, LANES) uint32
+    for i in range(GROUP):
+        v = jnp.zeros((R, LANES), jnp.uint32)
+        for j in range(bits):
+            v = v | (((w[j * R:(j + 1) * R, :] >> i) & 1) << j)
+        vals_ref[i * R:(i + 1) * R, :] = v
+
+
+@functools.partial(jax.jit, static_argnames=("bits", "interpret"))
+def pack_bits(x, bits: int, *, interpret: bool = True):
+    """Pack ``x`` (any shape, values < 2**bits) into uint32 wire words.
+
+    Returns a flat uint32 array of ``tiles·bits·R·LANES`` words — tile-
+    padded; the first ``logical_words(x.size, bits)`` carry information
+    under the documented layout.  interpret=True runs the kernel body in
+    Python on CPU (validation); interpret=False targets the TPU backend.
+    """
+    _check_bits(bits)
+    n = x.size
+    flat = x.reshape(-1).astype(jnp.uint32)
+    tiles = max(1, -(-n // _TILE_VALS))
+    pad = tiles * _TILE_VALS - n
+    if pad:
+        flat = jnp.pad(flat, (0, pad))
+    v2 = flat.reshape(tiles * GROUP * R, LANES)
+    return pl.pallas_call(
+        functools.partial(_pack_kernel, bits=bits),
+        grid=(tiles,),
+        in_specs=[pl.BlockSpec((GROUP * R, LANES), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((bits * R, LANES), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((tiles * bits * R, LANES), jnp.uint32),
+        interpret=interpret,
+    )(v2).reshape(-1)
+
+
+@functools.partial(jax.jit, static_argnames=("bits", "n", "interpret"))
+def unpack_bits(words, bits: int, n: int, *, interpret: bool = True):
+    """Inverse of :func:`pack_bits`: first ``n`` values as flat uint32."""
+    _check_bits(bits)
+    tiles = words.size // (bits * R * LANES)
+    if tiles * bits * R * LANES != words.size:
+        raise ValueError(f"word buffer size {words.size} is not a whole "
+                         f"number of ({bits}·{R}·{LANES})-word tiles")
+    if n > tiles * _TILE_VALS:
+        raise ValueError(f"cannot unpack {n} values from {tiles} tile(s)")
+    w2 = words.reshape(tiles * bits * R, LANES)
+    vals = pl.pallas_call(
+        functools.partial(_unpack_kernel, bits=bits),
+        grid=(tiles,),
+        in_specs=[pl.BlockSpec((bits * R, LANES), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((GROUP * R, LANES), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((tiles * GROUP * R, LANES),
+                                       jnp.uint32),
+        interpret=interpret,
+    )(w2)
+    return vals.reshape(-1)[:n]

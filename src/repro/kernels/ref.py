@@ -26,6 +26,39 @@ def quantize_ef_ref(msg, cache, *, levels: int, vmin: float, vmax: float):
     return idx.astype(dtype), new_cache
 
 
+def pack_bits_ref(x, bits: int):
+    """Pure-jnp oracle for :func:`repro.kernels.pack_bits.pack_bits`.
+
+    Implements the identical transposed bit-plane layout (value ``i`` of
+    group ``(r, lane)`` at row ``i·R + r``; its word ``j`` at row
+    ``j·R + r``) so the kernel must match it word-for-word.
+    """
+    from .pack_bits import GROUP, LANES, R, _TILE_VALS, _check_bits
+    _check_bits(bits)
+    n = x.size
+    flat = x.reshape(-1).astype(jnp.uint32)
+    tiles = max(1, -(-n // _TILE_VALS))
+    flat = jnp.pad(flat, (0, tiles * _TILE_VALS - n))
+    v = flat.reshape(tiles, GROUP, R, LANES)
+    j = jnp.arange(bits, dtype=jnp.uint32)[None, None, :, None, None]
+    i = jnp.arange(GROUP, dtype=jnp.uint32)[None, :, None, None, None]
+    planes = ((v[:, :, None] >> j) & 1) << i        # (T, 32, b, R, LANES)
+    return jnp.sum(planes, axis=1, dtype=jnp.uint32).reshape(-1)
+
+
+def unpack_bits_ref(words, bits: int, n: int):
+    """Pure-jnp oracle for :func:`repro.kernels.pack_bits.unpack_bits`."""
+    from .pack_bits import GROUP, LANES, R, _check_bits
+    _check_bits(bits)
+    tiles = words.size // (bits * R * LANES)
+    w = words.reshape(tiles, bits, R, LANES)
+    i = jnp.arange(GROUP, dtype=jnp.uint32)[None, :, None, None, None]
+    j = jnp.arange(bits, dtype=jnp.uint32)[None, None, :, None, None]
+    planes = ((w[:, None] >> i) & 1) << j           # (T, 32, b, R, LANES)
+    vals = jnp.sum(planes, axis=2, dtype=jnp.uint32)
+    return vals.reshape(-1)[:n]
+
+
 def flash_attention_ref(q, k, v, *, causal: bool = True, window=None,
                         softcap=None):
     """q,k,v: (B, S, H, D) (same kv heads — GQA expansion done by caller).

@@ -23,6 +23,11 @@ Event kinds: ``train_done``, ``isl_arrive``, ``tx_start`` (link-free /
 window-open wakeup), ``tx_done``, ``retry`` (async: no window anywhere,
 try again later).
 
+``msg_bytes`` is the measured on-wire size of one update — callers with a
+wire codec pass ``WireMessage.nbytes`` (see :mod:`repro.wire`), so every
+transmission time and each :class:`Delivery`'s ``nbytes`` record derive
+from actual encoded bytes, not nominal estimates.
+
 All timing is host-side numpy/python — device compute stays in the
 federated core.
 """
@@ -76,6 +81,7 @@ class Delivery:
     gateway: int        # satellite that performed the GS uplink
     station: int        # ground-station index
     hops: int           # ISL hops travelled
+    nbytes: float = 0.0  # measured on-wire size of the delivered update
 
 
 @dataclasses.dataclass
@@ -242,7 +248,8 @@ class Engine:
                 g, s = kw["gw"], kw["sat"]
                 deliveries.append(Delivery(
                     sat=s, t_done=t, t_start=t0, gateway=g,
-                    station=kw["station"], hops=hops_of.get(s, 0)))
+                    station=kw["station"], hops=hops_of.get(s, 0),
+                    nbytes=msg_bytes))
                 tx_state[g]["busy"] = False
                 try_tx(g, t)
 
@@ -379,7 +386,8 @@ class Engine:
                 g, s = kw["gw"], kw["sat"]
                 deliveries.append(Delivery(
                     sat=s, t_done=t, t_start=train_start[s], gateway=g,
-                    station=kw["station"], hops=kw["hops"]))
+                    station=kw["station"], hops=kw["hops"],
+                    nbytes=msg_bytes))
                 tx_state[g]["busy"] = False
                 try_tx(g, t)
                 # satellite picks up the fresh global model and retrains

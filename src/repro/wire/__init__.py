@@ -1,0 +1,22 @@
+"""Wire codec subsystem: real serialization for compressed updates.
+
+The paper's claim (§2.4) is communication *size* reduction; this package
+produces the actual bytes.  ``codec_for(compressor)`` returns a
+:class:`~repro.wire.codecs.WireCodec` whose ``encode`` turns a compressor
+output pytree into a :class:`~repro.wire.message.WireMessage` (packed
+uint32 words + exact header/payload byte counts, via the Pallas kernels
+in :mod:`repro.kernels.pack_bits`) and whose ``decode`` restores it
+bit-exactly.  The constellation simulator derives all transmission times
+and ``bytes_up`` accounting from ``WireMessage.nbytes``.
+"""
+from .codecs import (DenseCodec, QuantCodec, SignCodec, SparseCodec,
+                     WireCodec, codec_for, index_bits, measure_tree_bytes)
+from .message import (LEAF_HEADER_BASE_NBYTES, MESSAGE_HEADER_NBYTES,
+                      SHAPE_DIM_NBYTES, LeafWire, WireMessage)
+
+__all__ = [
+    "WireCodec", "QuantCodec", "SignCodec", "SparseCodec", "DenseCodec",
+    "codec_for", "measure_tree_bytes", "index_bits",
+    "WireMessage", "LeafWire", "MESSAGE_HEADER_NBYTES",
+    "LEAF_HEADER_BASE_NBYTES", "SHAPE_DIM_NBYTES",
+]
