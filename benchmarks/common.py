@@ -4,12 +4,11 @@ from __future__ import annotations
 import os
 
 import jax
-import jax.numpy as jnp
 
 from repro.core.baselines import LED, FedAvg, FedProx, FiveGCS
-from repro.core.compression import (Identity, RandD, UniformQuantizer)
+from repro.core.compression import RandD, UniformQuantizer
 from repro.core.error_feedback import EFChannel
-from repro.core.fedlt import FedLT, optimality_error
+from repro.core.fedlt import FedLT
 from repro.data.logistic import generate, make_local_loss, solve_global
 
 RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "results")

@@ -16,7 +16,6 @@ from __future__ import annotations
 
 import argparse
 import itertools
-import json
 import os
 import subprocess
 import sys

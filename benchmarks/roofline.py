@@ -8,7 +8,6 @@ Per (arch × shape), single-pod mesh:
 """
 from __future__ import annotations
 
-import glob
 import json
 import os
 

@@ -17,7 +17,7 @@ import numpy as np
 
 from repro.core.fedlt import optimality_error
 
-from .common import RESULTS_DIR, TUNED, make_algorithm, problem
+from .common import RESULTS_DIR, make_algorithm, problem
 
 CONFIGS = [
     ("quant L=1000 ±10", dict(levels=1000, vmin=-10.0, vmax=10.0)),

@@ -25,7 +25,7 @@ import numpy as np
 from repro.core.compression import (Identity, RandD, ScaledSign, TopK,
                                     UniformQuantizer)
 from repro.kernels.pack_bits import pack_bits, unpack_bits
-from repro.wire import codec_for, measure_tree_bytes
+from repro.wire import measure_tree_bytes
 
 
 def _time(fn, reps):

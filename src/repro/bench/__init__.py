@@ -1,0 +1,25 @@
+"""Performance benchmark harness: named benchmarks, JSON emission, CI gate.
+
+The perf trajectory of this repo is recorded in machine-readable
+``BENCH_sim.json`` / ``BENCH_kernels.json`` files at the repo root:
+
+  * ``python -m repro.bench --emit .`` runs the registered benchmarks
+    (wrapping the ``benchmarks/*.py`` entry points) and (re)writes the
+    baselines — sats/sec, pack GB/s, and end-to-end round times at
+    100/1000/10000-satellite scale;
+  * ``python -m repro.bench --tiny --emit bench_out/`` is the CI-sized
+    run (a strict subset of the full metric set);
+  * ``python -m repro.bench.compare bench_out`` checks a fresh run
+    against the committed baselines with a ±20% tolerance on gated
+    metrics (machine-independent ratios like fused-vs-unfused speedups;
+    absolute wall-clock metrics are informational only) and exits
+    non-zero on regression — the CI ``perf-gate`` job.
+
+Register your own with :func:`repro.bench.registry.register_benchmark`.
+"""
+from .registry import (BENCHMARKS, Benchmark, metric, register_benchmark,
+                       run_benchmarks)
+from .timing import time_fn
+
+__all__ = ["BENCHMARKS", "Benchmark", "metric", "register_benchmark",
+           "run_benchmarks", "time_fn"]

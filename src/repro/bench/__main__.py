@@ -1,0 +1,56 @@
+"""CLI: run the benchmark registry and emit BENCH_*.json.
+
+    python -m repro.bench --tiny --emit bench_out/     # CI-sized run
+    python -m repro.bench --emit .                     # refresh baselines
+    python -m repro.bench --list
+    python -m repro.bench --only sim.round_pipeline
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+from .registry import BENCHMARKS, run_benchmarks
+
+SCHEMA_VERSION = 1
+
+
+def emit(results, directory: str, tiny: bool) -> None:
+    os.makedirs(directory, exist_ok=True)
+    for group, benches in results.items():
+        path = os.path.join(directory, f"BENCH_{group}.json")
+        with open(path, "w") as f:
+            json.dump({"schema": SCHEMA_VERSION, "tiny": tiny,
+                       "benchmarks": benches}, f, indent=2, sort_keys=True)
+            f.write("\n")
+        print(f"wrote {path}")
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(prog="python -m repro.bench",
+                                 description=__doc__)
+    ap.add_argument("--tiny", action="store_true",
+                    help="CI-sized run (strict metric subset of the full run)")
+    ap.add_argument("--emit", metavar="DIR", default=None,
+                    help="write BENCH_<group>.json files into DIR")
+    ap.add_argument("--only", nargs="*", default=None,
+                    help="run only these registered benchmarks")
+    ap.add_argument("--list", action="store_true",
+                    help="list registered benchmarks and exit")
+    args = ap.parse_args(argv)
+
+    if args.list:
+        for name, b in sorted(BENCHMARKS.items()):
+            print(f"{name:28s} [{b.group}] {b.description}")
+        return 0
+
+    results = run_benchmarks(args.only, tiny=args.tiny)
+    if args.emit:
+        emit(results, args.emit, args.tiny)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,194 @@
+"""Named benchmark registry wrapping the ``benchmarks/*.py`` entry points.
+
+Each benchmark is a function ``fn(tiny: bool) -> {metric: metric_dict}``
+registered under ``"<group>.<name>"``; groups map to emitted files
+(``sim`` → ``BENCH_sim.json``, ``kernels`` → ``BENCH_kernels.json``).
+
+Metric schema (one dict per metric, see :func:`metric`):
+
+    {"value": float, "unit": str, "higher_is_better": bool, "gate": bool}
+
+``gate=True`` marks metrics the CI perf gate enforces against the
+committed baseline (±tolerance, see :mod:`repro.bench.compare`).  Only
+machine-independent RATIOS (fused-vs-unfused speedups) gate; absolute
+wall-clock and throughput numbers are recorded as the perf trajectory but
+do not fail CI, since the baseline and the CI runner are different
+machines.
+
+The ``--tiny`` metric set is a strict subset of the full set (same metric
+names at the shared scales), so a tiny CI run always finds its gated
+metrics in a full-run baseline.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, List, Optional
+
+BENCHMARKS: Dict[str, "Benchmark"] = {}
+
+
+@dataclasses.dataclass(frozen=True)
+class Benchmark:
+    name: str                       # "<group>.<name>"
+    group: str                      # "sim" | "kernels" | custom
+    fn: Callable[[bool], Dict[str, dict]]
+    description: str = ""
+
+
+def metric(value: float, unit: str, *, higher_is_better: bool,
+           gate: bool = False) -> dict:
+    """One recorded measurement (see module docstring for the schema)."""
+    return {"value": float(value), "unit": unit,
+            "higher_is_better": bool(higher_is_better), "gate": bool(gate)}
+
+
+def register_benchmark(name: str, group: str, description: str = ""):
+    """Decorator: register ``fn(tiny) -> {metric: metric_dict}``."""
+    def deco(fn):
+        BENCHMARKS[name] = Benchmark(name, group, fn, description)
+        return fn
+    return deco
+
+
+def run_benchmarks(names: Optional[List[str]] = None, *, tiny: bool = False,
+                   verbose: bool = True) -> Dict[str, Dict[str, Dict[str, dict]]]:
+    """Run (a subset of) the registry; returns {group: {bench: metrics}}."""
+    selected = sorted(BENCHMARKS) if names is None else names
+    out: Dict[str, Dict[str, Dict[str, dict]]] = {}
+    for name in selected:
+        if name not in BENCHMARKS:
+            raise KeyError(f"unknown benchmark {name!r}; "
+                           f"known: {sorted(BENCHMARKS)}")
+        b = BENCHMARKS[name]
+        if verbose:
+            print(f"# {b.name}: {b.description}")
+        try:
+            metrics = b.fn(tiny)
+        except ImportError as e:
+            # a wrapped entry point isn't importable from this cwd (the
+            # repo-root ``benchmarks/`` package): skip, don't break the
+            # benchmarks that can run
+            print(f"  SKIPPED ({e})")
+            continue
+        out.setdefault(b.group, {})[b.name] = metrics
+        if verbose:
+            for m, d in sorted(metrics.items()):
+                g = " [gate]" if d["gate"] else ""
+                print(f"  {m:40s} {d['value']:12.4f} {d['unit']}{g}")
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Built-in benchmarks.  The sim benchmarks wrap benchmarks/sim_scale.py —
+# importable from the repo root (namespace package); ImportError surfaces
+# as a skipped benchmark rather than breaking the registry.
+# ---------------------------------------------------------------------------
+
+@register_benchmark(
+    "kernels.pack_throughput", "kernels",
+    "transposed bit-plane pack/unpack value-side throughput (interpret)")
+def _pack_throughput(tiny: bool) -> Dict[str, dict]:
+    import jax
+    import jax.numpy as jnp
+    from ..kernels.pack_bits import pack_bits, unpack_bits
+    from .timing import gbps, time_fn
+    sizes = [1 << 16] if tiny else [1 << 16, 1 << 20]
+    out: Dict[str, dict] = {}
+    for n in sizes:
+        x = jax.random.randint(jax.random.PRNGKey(0), (n,), 0,
+                               255).astype(jnp.uint32)
+        words = pack_bits(x, 8, interpret=True)
+        t_pack = time_fn(lambda: pack_bits(x, 8, interpret=True))
+        t_unpack = time_fn(lambda: unpack_bits(words, 8, n, interpret=True))
+        out[f"pack_gbps_n{n}"] = metric(gbps(4 * n, t_pack), "GB/s",
+                                        higher_is_better=True)
+        out[f"unpack_gbps_n{n}"] = metric(gbps(4 * n, t_unpack), "GB/s",
+                                          higher_is_better=True)
+    return out
+
+
+@register_benchmark(
+    "kernels.fused_pipeline", "kernels",
+    "fused quantize→EF→pack sweep vs separate quantize_ef + pack_bits")
+def _fused_pipeline(tiny: bool) -> Dict[str, dict]:
+    import jax
+    import jax.numpy as jnp
+    from ..kernels.compress_pipeline import quant_pipeline
+    from ..kernels.pack_bits import pack_bits
+    from ..kernels.quantize_ef import quantize_ef
+    from .timing import time_pair
+    sizes = [1 << 18] if tiny else [1 << 18, 1 << 20]
+    out: Dict[str, dict] = {}
+    for n in sizes:
+        x = jax.random.normal(jax.random.PRNGKey(0), (n,)) * 0.3
+        z = jnp.zeros((n,))
+
+        def unfused():
+            w, c = quantize_ef(x, z, levels=255, vmin=-1.0, vmax=1.0,
+                               interpret=True)
+            return pack_bits(w, 8, interpret=True), c
+
+        def fused():
+            return quant_pipeline(x, z, levels=255, vmin=-1.0, vmax=1.0,
+                                  interpret=True)
+
+        t_u, t_f = time_pair(unfused, fused, reps=9)
+        out[f"unfused_ms_n{n}"] = metric(t_u * 1e3, "ms",
+                                         higher_is_better=False)
+        out[f"fused_ms_n{n}"] = metric(t_f * 1e3, "ms",
+                                       higher_is_better=False)
+        # gate only the size the tiny CI run measures; the larger size
+        # rides along informationally (its ratio shows rare cache-effect
+        # outliers on small hosts that would flake a ±20% gate)
+        out[f"speedup_n{n}"] = metric(t_u / t_f, "x", higher_is_better=True,
+                                      gate=(n == 1 << 18))
+    return out
+
+
+@register_benchmark(
+    "sim.round_pipeline", "sim",
+    "end-to-end sync round: cohort-batched fused uplink vs per-satellite "
+    "quantize_ef→pack_bits dispatch chain")
+def _sim_round_pipeline(tiny: bool) -> Dict[str, dict]:
+    from benchmarks.sim_scale import bench_round_pipeline
+    # mega-1000 runs even in the tiny CI set: its fused-vs-unfused ratio
+    # is the PR's headline claim and by far the most stable gate (~3x
+    # with ±10% spread; the 64-sat ratio hovers near 1.2x where dispatch
+    # noise could flake a ±20% gate, so it stays informational)
+    scales = [64, 1000]
+    out: Dict[str, dict] = {}
+    for n in scales:
+        r = bench_round_pipeline(n, rounds=3)
+        p = f"n{n}_"
+        out[p + "round_s_unfused"] = metric(r["round_s_unfused"], "s/round",
+                                            higher_is_better=False)
+        out[p + "round_s_fused"] = metric(r["round_s_fused"], "s/round",
+                                          higher_is_better=False)
+        out[p + "speedup"] = metric(r["speedup"], "x", higher_is_better=True,
+                                    gate=(n == 1000))
+        out[p + "sats_per_sec"] = metric(r["sats_per_sec_fused"], "sats/s",
+                                         higher_is_better=True)
+    return out
+
+
+@register_benchmark(
+    "sim.engine_scale", "sim",
+    "discrete-event engine throughput (cold plan build + sync rounds + "
+    "async deliveries) at 100/1000/10000-satellite scale")
+def _sim_engine_scale(tiny: bool) -> Dict[str, dict]:
+    from benchmarks.sim_scale import bench_scale
+    scales = [100] if tiny else [100, 1000, 10000]
+    out: Dict[str, dict] = {}
+    for n in scales:
+        rounds = 3
+        r = bench_scale(n, rounds=rounds, async_deliveries=100)
+        p = f"n{n}_"
+        out[p + "sync_sats_per_sec"] = metric(
+            r["sync_active"] / max(r["sync_s"], 1e-9), "sats/s",
+            higher_is_better=True)
+        out[p + "round_s"] = metric(r["sync_s"] / rounds, "s/round",
+                                    higher_is_better=False)
+        out[p + "async_deliveries_per_sec"] = metric(
+            r["async_n"] / max(r["async_s"], 1e-9), "deliveries/s",
+            higher_is_better=True)
+    return out

@@ -1,0 +1,58 @@
+"""Warmup/timing utilities shared by the registered benchmarks."""
+from __future__ import annotations
+
+import time
+from typing import Callable
+
+
+def _block(x) -> None:
+    """Wait for async jax work referenced by ``x`` (no-op for host values)."""
+    try:
+        import jax
+        jax.block_until_ready(x)
+    except (ImportError, TypeError):
+        pass
+
+
+def time_fn(fn: Callable, *, reps: int = 5, warmup: int = 1) -> float:
+    """Seconds per call of ``fn()``: ``warmup`` untimed calls (compile /
+    cache fill), then the MINIMUM of ``reps`` timed calls — the robust
+    estimator of the achievable time on a noisy shared machine — blocking
+    on the returned value so async dispatch doesn't leak out of the
+    clock."""
+    for _ in range(warmup):
+        _block(fn())
+    best = float("inf")
+    for _ in range(max(reps, 1)):
+        t0 = time.perf_counter()
+        _block(fn())
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def time_pair(fn_a: Callable, fn_b: Callable, *, reps: int = 7,
+              warmup: int = 1) -> tuple:
+    """Interleaved min-of-``reps`` timing of two functions.
+
+    Alternating A/B measurements make background load spikes hit both
+    paths symmetrically, which stabilizes the A/B *ratio* (the quantity
+    perf gates enforce) far better than timing each phase separately.
+    Returns (seconds_a, seconds_b).
+    """
+    for _ in range(warmup):
+        _block(fn_a())
+        _block(fn_b())
+    best_a = best_b = float("inf")
+    for _ in range(max(reps, 1)):
+        t0 = time.perf_counter()
+        _block(fn_a())
+        best_a = min(best_a, time.perf_counter() - t0)
+        t0 = time.perf_counter()
+        _block(fn_b())
+        best_b = min(best_b, time.perf_counter() - t0)
+    return best_a, best_b
+
+
+def gbps(nbytes: float, seconds: float) -> float:
+    """Throughput in GB/s (1e9 bytes)."""
+    return nbytes / max(seconds, 1e-12) / 1e9

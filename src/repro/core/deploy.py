@@ -25,7 +25,7 @@ participate — exactly how a real constellation executes.
 from __future__ import annotations
 
 import dataclasses
-from typing import NamedTuple, Optional
+from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
@@ -34,6 +34,7 @@ from jax.sharding import PartitionSpec as P
 from ..core.compression import (quantize_decode, quantize_encode,
                                 wire_index_bits)
 from ..core.pytree import tree_map
+from ..kernels.compress_pipeline import quant_pipeline
 from ..kernels.pack_bits import _TILE_VALS, pack_bits, unpack_bits
 from ..models.transformer import init_params, lm_loss
 
@@ -70,6 +71,12 @@ class DeployFedLT:
     # gather as plain ints: there the tile padding would exceed the
     # packing saving.
     pack_wire: bool = False
+    # run quantize + EF + pack as ONE fused Pallas sweep per tile-sized
+    # leaf (repro.kernels.compress_pipeline) instead of the separate
+    # quantize_encode → subtract → pack_bits dispatches: the intermediate
+    # integer tensor never round-trips through HBM.  Packed words are
+    # bit-identical either way; only the dispatch count changes.
+    fuse_pipeline: bool = True
     backend: str = "chunked"
 
     @property
@@ -120,41 +127,58 @@ class DeployFedLT:
 
         # ---- uplink: quantize + EF; integer tensor crosses the slow link --
         if self.compress:
-            msg = tree_map(jnp.add, z_new, state.c_up)
-            wire = tree_map(
-                lambda m: quantize_encode(m, self.levels, self.vmin, self.vmax), msg)
-            decoded = tree_map(
-                lambda w, m: quantize_decode(w, self.levels, self.vmin,
-                                             self.vmax, m.dtype), wire, msg)
-            c_up_new = tree_map(jnp.subtract, msg, decoded)
-            if self.pack_wire:
-                bits = self.wire_word_bits
-                interp = jax.default_backend() != "tpu"
+            bits = self.wire_word_bits
+            interp = jax.default_backend() != "tpu"
 
-                def gather_leaf(w, spec):
-                    # pack only tile-sized leaves: below _TILE_VALS the
-                    # kernel's tile padding would outweigh the b-bit
-                    # saving and the gather would move MORE bytes
-                    if w.size < _TILE_VALS:
-                        if spec is not None:
-                            w = jax.lax.with_sharding_constraint(w, spec)
-                        return w
+            def uplink_leaf(z, c, spec):
+                """One parameter tensor through uplink EF + wire: returns
+                (gathered wire floats, new EF cache).
+
+                Tile-sized leaves with ``pack_wire`` take the FUSED
+                quantize→EF→pack sweep (one Pallas dispatch, packed words
+                bit-identical to the separate path); ``fuse_pipeline=False``
+                keeps the separate quantize_encode → subtract → pack_bits
+                dispatches.  Leaves below one kernel tile (32768 values)
+                gather as plain ints either way: there the tile padding
+                would exceed the packing saving.
+                """
+                if (self.pack_wire and self.fuse_pipeline
+                        and z.size >= _TILE_VALS):
+                    words, newc = quant_pipeline(
+                        z, c, levels=self.levels, vmin=self.vmin,
+                        vmax=self.vmax, interpret=interp)
+                    if spec is not None:
+                        words = jax.lax.with_sharding_constraint(words, P(None))
+                    idx = unpack_bits(words, bits, z.size, interpret=interp)
+                    g = quantize_decode(idx, self.levels, self.vmin,
+                                        self.vmax, z.dtype).reshape(z.shape)
+                    return g, newc
+                m = z + c
+                w = quantize_encode(m, self.levels, self.vmin, self.vmax)
+                newc = m - quantize_decode(w, self.levels, self.vmin,
+                                           self.vmax, m.dtype)
+                if self.pack_wire and w.size >= _TILE_VALS:
                     p = pack_bits(w, bits, interpret=interp)
                     if spec is not None:
                         p = jax.lax.with_sharding_constraint(p, P(None))
-                    return unpack_bits(p, bits, w.size, interpret=interp
-                                       ).astype(w.dtype).reshape(w.shape)
+                    w = unpack_bits(p, bits, w.size, interpret=interp
+                                    ).astype(w.dtype).reshape(w.shape)
+                elif spec is not None:
+                    # replicate the agent dim of the INT tensor (int8 gather)
+                    w = jax.lax.with_sharding_constraint(w, spec)
+                g = quantize_decode(w, self.levels, self.vmin, self.vmax,
+                                    m.dtype)
+                return g, newc
 
-                if agent_replicate_spec is None:
-                    wire = tree_map(lambda w: gather_leaf(w, None), wire)
-                else:
-                    wire = tree_map(gather_leaf, wire, agent_replicate_spec)
-            elif agent_replicate_spec is not None:
-                # replicate the agent dim of the INT tensor (int8 gather)
-                wire = jax.lax.with_sharding_constraint(wire, agent_replicate_spec)
-            gathered = tree_map(
-                lambda w, m: quantize_decode(w, self.levels, self.vmin,
-                                             self.vmax, m.dtype), wire, msg)
+            leaves_z, treedef = jax.tree_util.tree_flatten(z_new)
+            leaves_c = treedef.flatten_up_to(state.c_up)
+            specs = (treedef.flatten_up_to(agent_replicate_spec)
+                     if agent_replicate_spec is not None
+                     else [None] * len(leaves_z))
+            pairs = [uplink_leaf(z, c, s)
+                     for z, c, s in zip(leaves_z, leaves_c, specs)]
+            gathered = treedef.unflatten([g for g, _ in pairs])
+            c_up_new = treedef.unflatten([nc for _, nc in pairs])
             z_bar = tree_map(lambda g: jnp.mean(g, axis=0), gathered)
         else:
             c_up_new = state.c_up

@@ -20,9 +20,11 @@ from __future__ import annotations
 import dataclasses
 from typing import Tuple
 
+import jax
 import jax.numpy as jnp
 
-from .compression import Compressor, Identity
+from .compression import (Compressor, Identity, UniformQuantizer,
+                          quantize_decode, wire_index_bits)
 from .pytree import tree_add, tree_sub, tree_zeros_like
 
 
@@ -50,3 +52,41 @@ class EFChannel:
         wire = self.compressor(key, corrected)
         new_cache = tree_sub(corrected, wire)
         return wire, new_cache
+
+    # -- fused pipeline fast path ------------------------------------------
+    def fusable(self) -> bool:
+        """True when :meth:`send_fused` can replace :meth:`send`: EF on and
+        a clip=True uniform quantizer (the elementwise codec the fused
+        Pallas sweep implements; clip=False lattice points outside
+        [vmin, vmax] have no on-wire index)."""
+        return (self.enabled and isinstance(self.compressor, UniformQuantizer)
+                and self.compressor.clip)
+
+    def send_fused(self, msg, cache) -> Tuple[object, object]:
+        """One fused compress→EF→pack sweep over the WHOLE (possibly
+        agent-stacked) tree — a single kernel dispatch per leaf instead of
+        a per-satellite add → compress → subtract chain.
+
+        Semantically identical to :meth:`send` for a fusable channel (the
+        quantizer is deterministic, so no key): the wire floats are the
+        decode of the exact packed words a transmitter would put on the
+        link, and the new cache is the same telescoping residual.
+        """
+        from ..kernels import ops  # lazy: kernels import core.compression
+        C = self.compressor
+        bits = wire_index_bits(C.levels)
+
+        def leaf(m, c):
+            words, newc = ops.quant_pipeline(m, c, levels=C.levels,
+                                             vmin=C.vmin, vmax=C.vmax)
+            idx = ops.unpack_bits(words, bits, m.size)
+            wire = quantize_decode(idx, C.levels, C.vmin, C.vmax,
+                                   jnp.float32).astype(m.dtype
+                                                       ).reshape(m.shape)
+            return wire, newc
+
+        leaves_m, treedef = jax.tree_util.tree_flatten(msg)
+        leaves_c = treedef.flatten_up_to(cache)
+        pairs = [leaf(m, c) for m, c in zip(leaves_m, leaves_c)]
+        return (treedef.unflatten([w for w, _ in pairs]),
+                treedef.unflatten([nc for _, nc in pairs]))

@@ -65,12 +65,30 @@ class SpaceRunner:
     buffer_size: int = 8         # async: aggregate every M landed updates
     staleness_alpha: float = 0.5  # async: wire weight (1+s)^(-alpha)
     compressor: Optional[Compressor] = None  # → measured WireMessage bytes
+    # byte measurement:
+    #   "probe"  — encode ONE representative message up front; every
+    #              delivery is accounted at that size (seed behavior)
+    #   "cohort" — account each sync round from the actually-transmitted
+    #              wire state, grouped per contact-window cohort (engine
+    #              Cohorts): quant codecs cost out analytically per
+    #              update (their sizes are shape-static), sparse codecs
+    #              encode each update so content-dependent sizes are
+    #              exact — ties in TopK or zeros in RandD shrink the
+    #              accounted payload below the nominal fraction·n
+    measure: str = "probe"       # "probe" | "cohort" (sync mode only)
 
     def __post_init__(self):
         if hasattr(self.engine, "select") and not hasattr(self.engine, "run_round"):
             object.__setattr__(self, "engine", self.engine._engine())
         if self.mode not in ("sync", "async"):
             raise ValueError(f"mode must be 'sync' or 'async', got {self.mode!r}")
+        if self.measure not in ("probe", "cohort"):
+            raise ValueError(
+                f"measure must be 'probe' or 'cohort', got {self.measure!r}")
+        if self.measure == "cohort" and self.mode == "async":
+            raise ValueError(
+                "measure='cohort' needs per-round RoundResults and is sync-"
+                "only; async runs account deliveries at the probe size")
 
     # -- shared setup ------------------------------------------------------
     def _msg_bytes(self, state) -> float:
@@ -110,9 +128,42 @@ class SpaceRunner:
         return self._run_sync(alg, state, data, n_rounds, key,
                               error_fn, log_every)
 
+    def _cohort_nbytes(self, state, cohorts) -> dict:
+        """Measured on-wire bytes per satellite, grouped per cohort.
+
+        Quant codecs have shape-static sizes, so each update is costed
+        analytically (``tree_nbytes`` of one satellite's slice — no
+        encode needed; the transmit-side *compute* for a cohort is the
+        fused kernel benchmarked in ``benchmarks/sim_scale.py`` and
+        exercised by ``FedLT(fused_uplink=True)``, not re-run here).
+        Sparse codecs encode each update from the actually-transmitted
+        wire state so content-dependent payload sizes are exact.
+        """
+        from ..wire.codecs import QuantCodec  # lazy: wire imports core
+        codec = self.compressor.wire_codec()
+        wire_field = "z_hat" if hasattr(state, "z_hat") else "m_hat"
+        tree = getattr(state, wire_field)
+        template = tree_map(lambda x: x[0], tree)
+        static_nb = (float(codec.tree_nbytes(template))
+                     if isinstance(codec, QuantCodec) else None)
+        out: dict = {}
+        for cohort in cohorts:
+            if static_nb is not None:
+                for s in cohort.sats:
+                    out[s] = static_nb
+                continue
+            idx = np.asarray(cohort.sats)
+            sub = tree_map(lambda x: x[idx], tree)
+            for i, s in enumerate(cohort.sats):
+                one = tree_map(lambda x: x[i], sub)
+                out[s] = float(codec.encode(one).nbytes)
+        return out
+
     # -- synchronous rounds ------------------------------------------------
     def _run_sync(self, alg, state, data, n_rounds, key, error_fn, log_every):
         msg = self._msg_bytes(state)
+        use_cohorts = (self.measure == "cohort" and self.compressor is not None
+                       and self.compressor.wire_codec() is not None)
         round_fn = jax.jit(alg.round)
         t, up_bytes = 0.0, 0.0
         logs: List[RoundLog] = []
@@ -123,7 +174,11 @@ class SpaceRunner:
             state, _ = round_fn(state, data, jnp.asarray(active_np), keys[k])
             t += res.duration
             # bytes_up = what actually crossed the GS links this round
-            up_bytes += sum(d.nbytes for d in res.deliveries)
+            if use_cohorts:
+                up_bytes += sum(
+                    self._cohort_nbytes(state, res.cohorts()).values())
+            else:
+                up_bytes += sum(d.nbytes for d in res.deliveries)
             err = (float(error_fn(state))
                    if error_fn is not None and (k % log_every == 0
                                                 or k == n_rounds - 1) else None)

@@ -11,7 +11,6 @@ reference point of the optimality-error metric e_k = Î£_i â€–x_{i,k} âˆ’ xÌ„â€–Â
 """
 from __future__ import annotations
 
-from typing import Tuple
 
 import jax
 import jax.numpy as jnp

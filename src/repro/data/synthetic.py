@@ -11,7 +11,6 @@ frame/patch embeddings (the modality frontend carve-out in the brief).
 """
 from __future__ import annotations
 
-from typing import Optional
 
 import jax
 import jax.numpy as jnp

@@ -6,9 +6,10 @@ automatically (CPU → interpret=True for validation, TPU → compiled kernel).
 from __future__ import annotations
 
 import jax
-import jax.numpy as jnp
 
 from . import ref
+from .compress_pipeline import quant_pipeline as _quant_pipeline
+from .compress_pipeline import sign_pipeline as _sign_pipeline
 from .flash_attention import flash_attention as _flash
 from .pack_bits import pack_bits as _pack_bits
 from .pack_bits import unpack_bits as _unpack_bits
@@ -40,6 +41,27 @@ def quantize_ef(msg, cache, *, levels=255, vmin=-0.25, vmax=0.25,
                                    vmax=vmax)
     return _quant_ef(msg, cache, levels=levels, vmin=vmin, vmax=vmax,
                      interpret=_interpret())
+
+
+def quant_pipeline(msg, cache, *, levels=255, vmin=-1.0, vmax=1.0,
+                   use_pallas: bool = True):
+    """Fused quantize→EF→pack sweep: (msg, cache) → (wire words, new cache).
+
+    One kernel dispatch replacing the separate quantize_ef → pack_bits
+    chain; output words are bit-identical to the unfused path.
+    """
+    if not use_pallas:
+        return ref.quant_pipeline_ref(msg, cache, levels=levels, vmin=vmin,
+                                      vmax=vmax)
+    return _quant_pipeline(msg, cache, levels=levels, vmin=vmin, vmax=vmax,
+                           interpret=_interpret())
+
+
+def sign_pipeline(msg, cache, *, use_pallas: bool = True):
+    """Fused scaled-sign→EF→1-bit-pack sweep → (words, scale, new cache)."""
+    if not use_pallas:
+        return ref.sign_pipeline_ref(msg, cache)
+    return _sign_pipeline(msg, cache, interpret=_interpret())
 
 
 def attention(q, k, v, *, causal=True, window=None, softcap=None,

@@ -59,6 +59,34 @@ def unpack_bits_ref(words, bits: int, n: int):
     return vals.reshape(-1)[:n]
 
 
+def quant_pipeline_ref(msg, cache, *, levels: int, vmin: float, vmax: float):
+    """Pure-jnp oracle for
+    :func:`repro.kernels.compress_pipeline.quant_pipeline`.
+
+    Composes the two existing oracles — quantize+EF then transposed
+    bit-plane packing — so the fused kernel must reproduce the separate
+    path word-for-word: ``words == pack_bits_ref(wire)`` and
+    ``new_cache == (msg + cache) − decode(wire)``.
+    """
+    wire, new_cache = quantize_ef_ref(msg, cache, levels=levels,
+                                      vmin=vmin, vmax=vmax)
+    bits = max(1, int(np.ceil(np.log2(levels + 1))))
+    words = pack_bits_ref(wire.astype(jnp.uint32), bits)
+    return words, new_cache
+
+
+def sign_pipeline_ref(msg, cache):
+    """Pure-jnp oracle for
+    :func:`repro.kernels.compress_pipeline.sign_pipeline`."""
+    corrected = msg.astype(jnp.float32) + cache.astype(jnp.float32)
+    scale = jnp.mean(jnp.abs(corrected.reshape(-1))).astype(jnp.float32)
+    bit = (corrected >= 0.0)
+    decoded = jnp.where(bit, scale, -scale)
+    new_cache = (corrected - decoded).astype(msg.dtype)
+    words = pack_bits_ref(bit.astype(jnp.uint32), 1)
+    return words, scale, new_cache
+
+
 def flash_attention_ref(q, k, v, *, causal: bool = True, window=None,
                         softcap=None):
     """q,k,v: (B, S, H, D) (same kv heads — GQA expansion done by caller).

@@ -81,6 +81,61 @@ def _leaf_spec(path, shape, mesh, *, fsdp, tp, n_lead: int = 0):
     return tuple(out)
 
 
+# ---------------------------------------------------------------------------
+# Fleet axis: shard the vmapped federated agent dimension across devices.
+# ---------------------------------------------------------------------------
+
+def fleet_mesh(n_devices: Optional[int] = None, *, axis: str = "fleet"):
+    """1-D mesh over local devices for sharding the agent dimension.
+
+    Returns ``None`` on a single device — the caller keeps the unsharded
+    path (``FedLT.round``); with multiple devices the returned mesh feeds
+    ``FedLT.round_sharded`` / :func:`shard_fleet`.
+    """
+    n = len(jax.devices()) if n_devices is None else n_devices
+    if n <= 1:
+        return None
+    return jax.make_mesh((n,), (axis,))
+
+
+def fleet_specs(tree, mesh, *, axis: str = "fleet",
+                n_agents: Optional[int] = None):
+    """PartitionSpec tree sharding each leaf's leading (agent) dim over the
+    fleet axis.
+
+    ``n_agents`` identifies the agent axis: only leaves whose leading dim
+    EQUALS it shard (pass it whenever the tree mixes agent-stacked and
+    coordinator leaves — e.g. ``FedLTState``, whose ``c_down`` has no
+    agent dim and must stay replicated even if its feature dim happens to
+    divide the device count).  Without ``n_agents``, any leaf whose
+    leading dim the axis size divides is treated as agent-stacked.
+    Non-divisible leading dims and scalars stay replicated either way.
+    """
+    n_dev = mesh.shape[axis]
+
+    def spec(leaf):
+        if not leaf.ndim or leaf.shape[0] % n_dev:
+            return P()
+        if n_agents is not None and leaf.shape[0] != n_agents:
+            return P()
+        return P(axis)
+
+    return jax.tree_util.tree_map(spec, tree)
+
+
+def shard_fleet(tree, mesh, *, axis: str = "fleet",
+                n_agents: Optional[int] = None):
+    """``device_put`` agent-stacked leaves with the leading dim sharded over
+    the fleet axis (single-device ``mesh=None`` passes through); see
+    :func:`fleet_specs` for why ``n_agents`` should be passed for mixed
+    trees like ``FedLTState``."""
+    if mesh is None:
+        return tree
+    specs = fleet_specs(tree, mesh, axis=axis, n_agents=n_agents)
+    return jax.tree_util.tree_map(
+        lambda x, s: jax.device_put(x, NamedSharding(mesh, s)), tree, specs)
+
+
 def param_specs(params_shape, mesh, *, agent_axes: Tuple[str, ...] = (),
                 stacked: Optional[bool] = None, fsdp="data", tp="model"):
     """PartitionSpec tree for a parameter pytree (shapes via eval_shape).

@@ -16,7 +16,7 @@ selective-scan kernel; numerics kept in float32 inside the scan.
 """
 from __future__ import annotations
 
-from typing import NamedTuple, Optional, Tuple
+from typing import NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp

@@ -13,19 +13,19 @@ Modes:
 """
 from __future__ import annotations
 
-from typing import Any, NamedTuple, Optional, Tuple
+from typing import Any, NamedTuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from .attention import KVCache, attention_block, init_attention, init_kv_cache
+from .attention import attention_block, init_attention, init_kv_cache
 from .config import ModelConfig
 from .layers import (embed, init_embed, init_mlp, init_rms_norm, mlp,
                      mrope_angles, rms_norm, rope_angles, sinusoidal_positions)
-from .mamba2 import SSMCache, init_mamba2, init_ssm_cache, mamba2_block
+from .mamba2 import init_mamba2, init_ssm_cache, mamba2_block
 from .moe import init_moe, moe
-from .rwkv6 import (RWKVCache, init_rwkv6, init_rwkv_cache, rwkv6_channel_mix,
+from .rwkv6 import (init_rwkv6, init_rwkv_cache, rwkv6_channel_mix,
                     rwkv6_time_mix)
 
 ATTN_KINDS = ("attn", "attn_local", "shared_attn")

@@ -2,12 +2,13 @@
 routing, and an event-queue engine with synchronous and asynchronous
 (FedBuff-style) operation."""
 from .contacts import ContactPlan
-from .engine import Delivery, Engine, RoundResult, Scenario
+from .engine import (Cohort, Delivery, Engine, RoundResult, Scenario,
+                     group_cohorts)
 from .routing import Route, Router, gateway_schedule
 from .scenarios import SCENARIOS, get_scenario, names, register
 
 __all__ = [
-    "ContactPlan", "Delivery", "Engine", "RoundResult", "Scenario",
-    "Route", "Router", "gateway_schedule",
+    "ContactPlan", "Cohort", "Delivery", "Engine", "RoundResult", "Scenario",
+    "group_cohorts", "Route", "Router", "gateway_schedule",
     "SCENARIOS", "get_scenario", "names", "register",
 ]

@@ -44,7 +44,7 @@ import numpy as np
 from ..constellation.links import LinkModel
 from ..constellation.orbits import GroundStation, Walker
 from .contacts import ContactPlan
-from .routing import Route, Router
+from .routing import Router
 
 
 @dataclasses.dataclass(frozen=True, eq=False)
@@ -82,6 +82,49 @@ class Delivery:
     station: int        # ground-station index
     hops: int           # ISL hops travelled
     nbytes: float = 0.0  # measured on-wire size of the delivered update
+    window: float = float("nan")  # rise time of the contact window used
+
+
+@dataclasses.dataclass
+class Cohort:
+    """Deliveries sharing one (station, contact window): the unit at which
+    uplink compression work batches.
+
+    Every update that crosses the same ground-station window is, at the
+    receiving end, one contiguous burst — so the compress→EF→pack chain
+    for a cohort's satellites runs as ONE stacked kernel dispatch
+    (:mod:`repro.kernels.compress_pipeline`) instead of one chain per
+    satellite.  See ``SpaceRunner(measure="cohort")``.
+    """
+
+    station: int
+    window: float               # rise time of the shared contact window
+    sats: List[int]             # delivery order within the window
+    deliveries: List[Delivery]
+
+    @property
+    def t_first(self) -> float:
+        return self.deliveries[0].t_done
+
+    @property
+    def t_last(self) -> float:
+        return self.deliveries[-1].t_done
+
+
+def group_cohorts(deliveries: Sequence[Delivery]) -> List["Cohort"]:
+    """Group deliveries into per-(station, contact-window) cohorts, ordered
+    by first delivery time.  Deliveries predating the ``window`` field
+    (NaN) each form a singleton cohort."""
+    groups: Dict[tuple, Cohort] = {}
+    for i, d in enumerate(deliveries):
+        key = (d.station, d.window) if d.window == d.window else ("?", i)
+        c = groups.get(key)
+        if c is None:
+            groups[key] = Cohort(d.station, d.window, [d.sat], [d])
+        else:
+            c.sats.append(d.sat)
+            c.deliveries.append(d)
+    return sorted(groups.values(), key=lambda c: c.t_first)
 
 
 @dataclasses.dataclass
@@ -91,6 +134,11 @@ class RoundResult:
     deliveries: List[Delivery]
     scheduled: np.ndarray       # bool (S,) — what the policy planned
     t0: float = 0.0
+
+    def cohorts(self) -> List[Cohort]:
+        """Per-(station, contact-window) delivery cohorts (see
+        :class:`Cohort`)."""
+        return group_cohorts(self.deliveries)
 
 
 class Engine:
@@ -227,7 +275,8 @@ class Engine:
             _, sat = st["queue"].pop(0)         # FIFO = arrival order
             st["busy"] = True
             station_free[win[2]] = t + gs_tx
-            push(t + gs_tx, "tx_done", gw=g, sat=sat, station=win[2])
+            push(t + gs_tx, "tx_done", gw=g, sat=sat, station=win[2],
+                 win_rise=win[0])
 
         while q:
             t, _, kind, kw = heapq.heappop(q)
@@ -249,7 +298,7 @@ class Engine:
                 deliveries.append(Delivery(
                     sat=s, t_done=t, t_start=t0, gateway=g,
                     station=kw["station"], hops=hops_of.get(s, 0),
-                    nbytes=msg_bytes))
+                    nbytes=msg_bytes, window=kw["win_rise"]))
                 tx_state[g]["busy"] = False
                 try_tx(g, t)
 
@@ -353,7 +402,7 @@ class Engine:
             st["busy"] = True
             station_free[win[2]] = t + gs_tx
             push(t + gs_tx, "tx_done", gw=g, sat=meta[1], hops=meta[2],
-                 station=win[2])
+                 station=win[2], win_rise=win[0])
 
         def dispatch(s, t):
             route = choose_route(s, t)
@@ -387,7 +436,7 @@ class Engine:
                 deliveries.append(Delivery(
                     sat=s, t_done=t, t_start=train_start[s], gateway=g,
                     station=kw["station"], hops=kw["hops"],
-                    nbytes=msg_bytes))
+                    nbytes=msg_bytes, window=kw["win_rise"]))
                 tx_state[g]["busy"] = False
                 try_tx(g, t)
                 # satellite picks up the fresh global model and retrains

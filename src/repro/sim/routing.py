@@ -27,7 +27,7 @@ Relay accounting (fixes the seed scheduler's bugs):
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import Dict, Optional, Sequence, Tuple
 
 from ..constellation.links import LinkModel
 from ..constellation.orbits import Walker, isl_neighbors

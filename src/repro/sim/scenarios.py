@@ -13,6 +13,8 @@ the harder regimes the realistic-space-scenario comparison needs:
                      (deterministic pattern — no RNG in scenario defs)
     mega-1000        1000 sats / 20 planes, three stations, 8 gateways
                      per round — the scale target from the ROADMAP
+    mega-10000       10000 sats / 40 planes, 16 gateways per round — the
+                     dense mega-constellation regime (bench-only scale)
 
 Usage::
 
@@ -29,7 +31,6 @@ from typing import Callable, Dict, List
 
 import numpy as np
 
-from ..constellation.links import LinkModel
 from ..constellation.orbits import GroundStation, Walker
 from .engine import Scenario
 
@@ -91,3 +92,13 @@ def _mega_1000() -> Scenario:
                     walker=Walker(n_sats=1000, n_planes=20),
                     stations=(KIRUNA, SVALBARD, INUVIK),
                     k_direct=8, n_relay=4, max_hops=6)
+
+
+@register("mega-10000")
+def _mega_10000() -> Scenario:
+    # dense mega-constellation regime (Razmi et al., Matthiesen et al.):
+    # 10k sats / 40 planes, three polar stations, 16 gateways per round
+    return Scenario(name="mega-10000",
+                    walker=Walker(n_sats=10000, n_planes=40),
+                    stations=(KIRUNA, SVALBARD, INUVIK),
+                    k_direct=16, n_relay=4, max_hops=6)

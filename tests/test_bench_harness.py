@@ -1,0 +1,115 @@
+"""Bench harness: registry shape, JSON emission, and the perf-gate logic.
+
+The comparator tests run on synthetic BENCH_*.json files — no timing in
+tier-1.  Benchmark execution itself is covered by the CI perf-gate job
+(``python -m repro.bench --tiny``).
+"""
+import json
+
+import pytest
+
+from repro.bench import BENCHMARKS, metric
+from repro.bench.compare import compare_dirs, format_report
+from repro.bench.__main__ import emit
+
+
+def _write(directory, group, benches):
+    emit({group: benches}, str(directory), tiny=False)
+
+
+def test_registry_has_builtin_benchmarks():
+    assert {"kernels.pack_throughput", "kernels.fused_pipeline",
+            "sim.round_pipeline", "sim.engine_scale"} <= set(BENCHMARKS)
+    for name, b in BENCHMARKS.items():
+        assert name == b.name and name.startswith(f"{b.group}.")
+        assert b.description
+
+
+def test_metric_schema():
+    m = metric(1.5, "x", higher_is_better=True, gate=True)
+    assert m == {"value": 1.5, "unit": "x", "higher_is_better": True,
+                 "gate": True}
+
+
+def test_emit_writes_schema_json(tmp_path):
+    _write(tmp_path, "sim", {"sim.fake": {
+        "speedup": metric(2.0, "x", higher_is_better=True, gate=True)}})
+    payload = json.loads((tmp_path / "BENCH_sim.json").read_text())
+    assert payload["schema"] == 1
+    assert payload["benchmarks"]["sim.fake"]["speedup"]["value"] == 2.0
+
+
+@pytest.mark.parametrize("hib,new,expected", [
+    (True, 2.0, "ok"),            # unchanged
+    (True, 1.7, "ok"),            # within −20%
+    (True, 1.5, "regression"),    # worse than −20%
+    (True, 2.6, "improved"),      # better than +20%
+    (False, 2.3, "ok"),           # lower-is-better within +20%
+    (False, 2.5, "regression"),   # lower-is-better worse than +20%
+    (False, 1.5, "improved"),
+])
+def test_gate_verdicts(tmp_path, hib, new, expected):
+    base_dir, new_dir = tmp_path / "base", tmp_path / "new"
+    _write(base_dir, "sim", {"sim.fake": {
+        "m": metric(2.0, "x", higher_is_better=hib, gate=True)}})
+    _write(new_dir, "sim", {"sim.fake": {
+        "m": metric(new, "x", higher_is_better=hib, gate=True)}})
+    passed, verdicts = compare_dirs(str(new_dir), str(base_dir), tol=0.2)
+    (v,) = [v for v in verdicts if v.metric == "m"]
+    assert v.status == expected
+    assert passed == (expected != "regression")
+    assert "gated" in format_report(verdicts, 0.2)
+
+
+def test_ungated_metrics_never_fail(tmp_path):
+    base_dir, new_dir = tmp_path / "base", tmp_path / "new"
+    _write(base_dir, "kernels", {"kernels.fake": {
+        "gbps": metric(10.0, "GB/s", higher_is_better=True)}})
+    _write(new_dir, "kernels", {"kernels.fake": {
+        "gbps": metric(1.0, "GB/s", higher_is_better=True)}})
+    passed, verdicts = compare_dirs(str(new_dir), str(base_dir), tol=0.2)
+    assert passed
+    (v,) = [v for v in verdicts if v.metric == "gbps"]
+    assert v.status == "info"
+
+
+def test_tiny_subset_of_full_baseline_compares_clean(tmp_path):
+    """A tiny run (subset of metrics) against a full baseline: UNGATED
+    metrics only in the baseline are 'missing' informational rows — the
+    CI contract (tiny runs always contain every gated metric)."""
+    base_dir, new_dir = tmp_path / "base", tmp_path / "new"
+    _write(base_dir, "sim", {"sim.fake": {
+        "n64_speedup": metric(1.4, "x", higher_is_better=True, gate=True),
+        "n10000_sats_per_sec": metric(9.0, "sats/s", higher_is_better=True),
+    }})
+    _write(new_dir, "sim", {"sim.fake": {
+        "n64_speedup": metric(1.35, "x", higher_is_better=True, gate=True)}})
+    passed, verdicts = compare_dirs(str(new_dir), str(base_dir), tol=0.2)
+    assert passed
+    statuses = {v.metric: v.status for v in verdicts}
+    assert statuses["n64_speedup"] == "ok"
+    assert statuses["n10000_sats_per_sec"] == "missing"
+
+
+def test_gate_fails_closed_when_gated_metric_absent(tmp_path):
+    """A GATED baseline metric the fresh run failed to produce (broken or
+    skipped benchmark) must fail the gate, not report 'missing'."""
+    base_dir, new_dir = tmp_path / "base", tmp_path / "new"
+    _write(base_dir, "sim", {"sim.fake": {
+        "speedup": metric(2.8, "x", higher_is_better=True, gate=True)}})
+    _write(new_dir, "sim", {})          # benchmark skipped / crashed
+    passed, verdicts = compare_dirs(str(new_dir), str(base_dir), tol=0.2)
+    assert not passed
+    (v,) = [v for v in verdicts if v.metric == "speedup"]
+    assert v.status == "regression"
+    assert "regression" in format_report(verdicts, 0.2)
+
+
+def test_missing_baseline_files_pass(tmp_path):
+    """No committed baselines at all (fresh repo) — gate passes vacuously."""
+    new_dir = tmp_path / "new"
+    _write(new_dir, "sim", {"sim.fake": {
+        "m": metric(1.0, "x", higher_is_better=True, gate=True)}})
+    passed, verdicts = compare_dirs(str(new_dir), str(tmp_path / "nope"),
+                                    tol=0.2)
+    assert passed

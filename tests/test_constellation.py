@@ -1,6 +1,5 @@
 """Constellation substrate: orbital mechanics sanity + scheduler behaviour."""
 import numpy as np
-import pytest
 
 from repro.constellation.links import LinkModel, message_bytes
 from repro.constellation.orbits import (GroundStation, Walker, elevation,

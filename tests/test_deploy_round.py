@@ -9,7 +9,6 @@ Verifies the mesh-shardable ``DeployFedLT.round_step``:
 """
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.core.deploy import DeployFedLT
 from repro.data.synthetic import make_batch

@@ -1,0 +1,134 @@
+"""EFChannel coverage: telescoping property + fused-channel equivalence.
+
+The paper's §2.2 invariant — no information is ever lost through an EF
+channel — is the telescoping identity
+
+    Σ_k wire_k + cache_K = Σ_k msg_k        (cache_0 = 0)
+
+which must hold for EVERY compressor, over pytrees, and through the fused
+kernel path (``EFChannel.send_fused``).  A hypothesis variant sweeps
+random shapes/rounds when hypothesis is installed; the deterministic
+sweep below always runs.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.compression import (Identity, ScaledSign, TopK,
+                                    UniformQuantizer)
+from repro.core.error_feedback import EFChannel
+
+QUANT = UniformQuantizer(levels=50, vmin=-2.0, vmax=2.0, clip=True)
+
+
+def _run_channel(ch, msgs, tree=False):
+    """Thread ``msgs`` (R, n) through the channel; returns (Σ wires + final
+    cache, Σ msgs) as flat numpy arrays."""
+    def as_tree(x):
+        return {"a": x[:7], "b": x[7:].reshape(3, -1)} if tree else x
+
+    cache = jax.tree_util.tree_map(jnp.zeros_like, as_tree(msgs[0]))
+    total = jax.tree_util.tree_map(jnp.zeros_like, as_tree(msgs[0]))
+    for r in range(msgs.shape[0]):
+        wire, cache = ch.send(jax.random.PRNGKey(r), as_tree(msgs[r]), cache)
+        total = jax.tree_util.tree_map(jnp.add, total, wire)
+    lhs = jnp.concatenate([x.reshape(-1) for x in
+                           jax.tree_util.tree_leaves(
+                               jax.tree_util.tree_map(jnp.add, total, cache))])
+    rhs = np.asarray(msgs).sum(axis=0).reshape(-1)
+    return np.asarray(lhs), rhs
+
+
+@pytest.mark.parametrize("name,compressor", [
+    ("quant", QUANT),
+    ("topk", TopK(fraction=0.3)),
+    ("sign", ScaledSign()),
+    ("identity", Identity()),
+])
+@pytest.mark.parametrize("tree", [False, True])
+@pytest.mark.parametrize("seed,rounds", [(0, 3), (1, 8), (2, 15)])
+def test_ef_telescopes_to_uncompressed_sum(name, compressor, tree, seed,
+                                           rounds):
+    """compressed-plus-residual telescopes to the uncompressed sum."""
+    msgs = jax.random.uniform(jax.random.PRNGKey(seed), (rounds, 25),
+                              minval=-1.5, maxval=1.5)
+    lhs, rhs = _run_channel(EFChannel(compressor), msgs, tree=tree)
+    np.testing.assert_allclose(lhs, rhs, rtol=0, atol=1e-4)
+
+
+def test_ef_disabled_does_not_telescope():
+    """Sanity: without EF (Algorithm 1) the quantization error is LOST —
+    the telescoping identity must fail for a coarse quantizer."""
+    msgs = jax.random.uniform(jax.random.PRNGKey(3), (10, 25),
+                              minval=-1.5, maxval=1.5)
+    lhs, rhs = _run_channel(EFChannel(QUANT, enabled=False), msgs)
+    assert np.abs(lhs - rhs).max() > 1e-3
+
+
+def test_send_fused_matches_send():
+    """The fused kernel path is the same channel: identical wires (the
+    quantizer is deterministic) and identical caches, over pytrees."""
+    ch = EFChannel(UniformQuantizer(levels=255, vmin=-1.0, vmax=1.0,
+                                    clip=True))
+    assert ch.fusable()
+    key = jax.random.PRNGKey(0)
+    msg = {"w": jax.random.normal(key, (8, 40)) * 0.3,
+           "b": jax.random.normal(jax.random.fold_in(key, 1), (130,)) * 0.3}
+    cache = ch.init_cache(msg)
+    for r in range(4):
+        wire_v, cache_v = ch.send(None, msg, cache)
+        wire_f, cache_f = ch.send_fused(msg, cache)
+        for a, b in zip(jax.tree_util.tree_leaves(wire_v),
+                        jax.tree_util.tree_leaves(wire_f)):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                       atol=2e-7)
+        for a, b in zip(jax.tree_util.tree_leaves(cache_v),
+                        jax.tree_util.tree_leaves(cache_f)):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                       atol=2e-7)
+        cache = cache_f
+        msg = jax.tree_util.tree_map(
+            lambda x: x * 0.9 + 0.01, msg)
+
+
+def test_send_fused_telescopes():
+    """Telescoping holds through the fused path too."""
+    ch = EFChannel(UniformQuantizer(levels=50, vmin=-2.0, vmax=2.0,
+                                    clip=True))
+    msgs = jax.random.uniform(jax.random.PRNGKey(5), (8, 64),
+                              minval=-1.5, maxval=1.5)
+    cache = jnp.zeros((64,))
+    total = jnp.zeros((64,))
+    for r in range(8):
+        wire, cache = ch.send_fused(msgs[r], cache)
+        total = total + wire
+    np.testing.assert_allclose(np.asarray(total + cache),
+                               np.asarray(msgs.sum(axis=0)),
+                               rtol=0, atol=1e-4)
+
+
+def test_not_fusable_cases():
+    assert not EFChannel(TopK(fraction=0.5)).fusable()
+    assert not EFChannel(UniformQuantizer(clip=False)).fusable()
+    assert not EFChannel(QUANT, enabled=False).fusable()
+
+
+# -- hypothesis sweep (optional dep, CI installs it) -----------------------
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+if HAVE_HYPOTHESIS:
+    @settings(max_examples=25, deadline=None)
+    @given(seed=st.integers(0, 2**31 - 1), rounds=st.integers(2, 10),
+           n=st.integers(2, 80))
+    def test_ef_telescopes_property(seed, rounds, n):
+        msgs = jax.random.uniform(jax.random.PRNGKey(seed), (rounds, n),
+                                  minval=-1.5, maxval=1.5)
+        ch = EFChannel(UniformQuantizer(levels=8, vmin=-2, vmax=2,
+                                        clip=True))
+        lhs, rhs = _run_channel(ch, msgs)
+        np.testing.assert_allclose(lhs, rhs, rtol=0, atol=1e-4)

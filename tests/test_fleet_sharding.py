@@ -1,0 +1,92 @@
+"""Fleet-axis sharding: single-device fallback + multi-device equivalence.
+
+The multi-device case forces 4 host CPU devices via XLA_FLAGS in a
+subprocess (the flag must be set before jax initializes, which the main
+test process has long since done) and checks the shard_map round against
+the unsharded round.
+"""
+import os
+import subprocess
+import sys
+import textwrap
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.launch.sharding import fleet_mesh, fleet_specs, shard_fleet
+
+
+def test_fleet_mesh_single_device_is_none():
+    if len(jax.devices()) > 1:
+        pytest.skip("host has multiple devices")
+    assert fleet_mesh() is None
+    # shard_fleet with mesh=None is the identity
+    tree = {"a": jnp.ones((4, 3))}
+    out = shard_fleet(tree, None)
+    assert out is tree
+
+
+def test_fleet_specs_divisibility():
+    mesh = jax.make_mesh((1,), ("fleet",))
+    specs = fleet_specs({"a": jnp.ones((4, 3)), "s": jnp.zeros(())}, mesh)
+    assert specs["a"] == jax.sharding.PartitionSpec("fleet")
+    assert specs["s"] == jax.sharding.PartitionSpec()
+
+
+_SUBPROCESS_BODY = textwrap.dedent("""
+    import jax, jax.numpy as jnp, numpy as np
+    from repro.core.fedlt import FedLT
+    from repro.core.error_feedback import EFChannel
+    from repro.core.compression import UniformQuantizer
+    from repro.data.logistic import generate, make_local_loss
+    from repro.launch.sharding import fleet_mesh, shard_fleet
+
+    assert len(jax.devices()) == 4, jax.devices()
+    n_agents, m, dim = 8, 20, 12
+    data, _ = generate(jax.random.PRNGKey(0), n_agents=n_agents, m=m,
+                       dim=dim)
+    loss = make_local_loss(eps=5.0, n_agents=n_agents)
+    C = UniformQuantizer(levels=100, vmin=-3, vmax=3, clip=True)
+    alg = FedLT(loss=loss, n_epochs=3, gamma=0.05, rho=5.0,
+                uplink=EFChannel(C), downlink=EFChannel(C))
+    state = alg.init(jnp.zeros((dim,)), n_agents)
+    active = jnp.ones((n_agents,), bool)
+    key = jax.random.PRNGKey(7)
+
+    s1, _ = jax.jit(alg.round)(state, data, active, key)
+
+    mesh = fleet_mesh()
+    assert mesh is not None and mesh.shape["fleet"] == 4
+    round_fn = alg.round_sharded(mesh, n_agents)
+    s2, info = jax.jit(round_fn)(
+        shard_fleet(state, mesh, n_agents=n_agents),
+        shard_fleet(data, mesh, n_agents=n_agents), active, key)
+    assert int(info["n_active"]) == n_agents
+    for a, b in zip(jax.tree_util.tree_leaves(s1),
+                    jax.tree_util.tree_leaves(s2)):
+        np.testing.assert_allclose(np.asarray(a, np.float32),
+                                   np.asarray(b, np.float32),
+                                   atol=1e-5, rtol=1e-5)
+
+    # run() drives the sharded round through scan
+    fs, logs = alg.run(shard_fleet(state, mesh, n_agents=n_agents),
+                       shard_fleet(data, mesh, n_agents=n_agents),
+                       3, jax.random.PRNGKey(1), mesh=mesh)
+    assert int(fs.k) == 3
+    print("FLEET_OK")
+""")
+
+
+def test_round_sharded_matches_unsharded_subprocess():
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = (env.get("XLA_FLAGS", "")
+                        + " --xla_force_host_platform_device_count=4").strip()
+    env["PYTHONPATH"] = os.pathsep.join(
+        [os.path.join(os.path.dirname(__file__), "..", "src"),
+         env.get("PYTHONPATH", "")]).rstrip(os.pathsep)
+    proc = subprocess.run([sys.executable, "-c", _SUBPROCESS_BODY],
+                          capture_output=True, text=True, env=env,
+                          timeout=600)
+    assert proc.returncode == 0, proc.stderr[-4000:]
+    assert "FLEET_OK" in proc.stdout

@@ -7,7 +7,6 @@ Correctness guards for the §Perf iterations:
 import dataclasses
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import ARCHS, smoke_variant

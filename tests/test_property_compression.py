@@ -16,11 +16,12 @@ import numpy as np
 import pytest
 
 pytest.importorskip("hypothesis")
-from hypothesis import given, settings, strategies as st
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
-from repro.core.compression import (RandD, ScaledSign, TopK, UniformQuantizer,
-                                    quantize_decode, quantize_encode)
-from repro.core.error_feedback import EFChannel
+from repro.core.compression import (RandD, ScaledSign, TopK,  # noqa: E402
+                                    UniformQuantizer, quantize_decode,
+                                    quantize_encode)
+from repro.core.error_feedback import EFChannel  # noqa: E402
 
 finite_arrays = st.lists(
     st.floats(min_value=-5.0, max_value=5.0, allow_nan=False, width=32),

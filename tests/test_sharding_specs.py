@@ -5,7 +5,6 @@ real axis sizes, so we build the production mesh shape with AbstractMesh.
 """
 import jax
 import jax.numpy as jnp
-import pytest
 from jax.sharding import AbstractMesh, PartitionSpec as P
 
 from repro.configs import ARCHS

@@ -259,3 +259,75 @@ def test_engine_runs_thousand_satellite_scenario():
     assert res.mask.sum() >= eng.scenario.k_direct
     ds = eng.run_async(0.0, MSG, n_deliveries=50)
     assert len(ds) == 50
+
+
+# ---------------------------------------------------------------------------
+# contact-window cohorts (fused-pipeline batching unit)
+# ---------------------------------------------------------------------------
+
+def test_round_cohorts_partition_deliveries():
+    eng = Engine(get_scenario("mega-1000"))
+    res = eng.run_round(0.0, MSG)
+    cohorts = res.cohorts()
+    assert cohorts, "round delivered nothing"
+    # cohorts partition the deliveries, keyed by (station, window)
+    flat = [d for c in cohorts for d in c.deliveries]
+    assert len(flat) == len(res.deliveries)
+    for c in cohorts:
+        assert c.sats == [d.sat for d in c.deliveries]
+        for d in c.deliveries:
+            assert d.station == c.station
+            assert d.window == c.window
+            assert np.isfinite(d.window)
+        assert c.t_first <= c.t_last
+    # ordered by first delivery
+    firsts = [c.t_first for c in cohorts]
+    assert firsts == sorted(firsts)
+
+
+def test_async_deliveries_carry_windows():
+    from repro.sim import group_cohorts
+    eng = Engine(Scenario(walker=Walker(n_sats=20, n_planes=4),
+                          stations=(GroundStation(),)))
+    ds = eng.run_async(0.0, MSG, n_deliveries=30)
+    assert all(np.isfinite(d.window) for d in ds)
+    cohorts = group_cohorts(ds)
+    assert sum(len(c.deliveries) for c in cohorts) == len(ds)
+    # a delivery must land inside (or after the rise of) its window
+    assert all(d.t_done >= d.window for d in ds)
+
+
+def test_space_runner_cohort_measure_matches_probe():
+    """measure='cohort' serializes the actual per-round state, batched per
+    contact window — for a quant codec (static sizes) bytes_up must equal
+    the probe-based accounting exactly."""
+    from repro.core.compression import UniformQuantizer
+    from repro.core.error_feedback import EFChannel
+
+    n_agents, dim = 12, 40
+    data, _ = generate(jax.random.PRNGKey(0), n_agents=n_agents, m=20,
+                       dim=dim)
+    loss = make_local_loss(eps=50.0, n_agents=n_agents)
+    C = UniformQuantizer(levels=10, vmin=-1, vmax=1, clip=True)
+    alg = FedLT(loss=loss, n_epochs=1, gamma=0.005, rho=20.0,
+                uplink=EFChannel(C), downlink=EFChannel(C))
+    st0 = alg.init(jnp.zeros((dim,)), n_agents)
+    sc = Scenario(walker=Walker(n_sats=n_agents, n_planes=3),
+                  stations=(GroundStation(),))
+    _, logs_probe = SpaceRunner(Engine(sc), compressor=C).run(
+        alg, st0, data, 3, jax.random.PRNGKey(2))
+    _, logs_cohort = SpaceRunner(Engine(sc), compressor=C,
+                                 measure="cohort").run(
+        alg, st0, data, 3, jax.random.PRNGKey(2))
+    assert [l.bytes_up for l in logs_cohort] == \
+        [l.bytes_up for l in logs_probe]
+
+
+def test_space_runner_rejects_bad_measure():
+    sc = Scenario(walker=Walker(n_sats=4, n_planes=2),
+                  stations=(GroundStation(),))
+    with pytest.raises(ValueError, match="measure"):
+        SpaceRunner(Engine(sc), measure="wat")
+    # cohort accounting needs per-round RoundResults — sync only
+    with pytest.raises(ValueError, match="sync"):
+        SpaceRunner(Engine(sc), mode="async", measure="cohort")
