@@ -2,7 +2,7 @@
 per-round propagation path, engine throughput up to 10000 satellites, and
 the fused uplink-compression pipeline vs the per-satellite chain.
 
-Three claims:
+Four claims:
 
   1. Precomputing the contact plan (O(T·S) once + O(log T) lookups) beats
      the seed scheduler (which re-propagated a 720-step visibility grid on
@@ -13,13 +13,23 @@ Three claims:
      contact-window cohort, ``repro.kernels.compress_pipeline``) beats the
      per-satellite quantize_ef→pack_bits dispatch chain by ≥ 2× on the
      end-to-end ``mega-1000`` round (engine events + uplink serialization).
+  4. The stochastic lossy channel (``repro.channel``: ARQ + counter-hash
+     erasures) adds bounded host overhead to a ``mega-1000`` round, and
+     lossy transport of the fused uplink stays on-device: the
+     quant_pipeline→erasure_mask chain beats the unfused
+     quantize_ef→pack_bits→erasure_mask chain (``bench_lossy_round``).
+
+Run:  PYTHONPATH=src python benchmarks/sim_scale.py [--quick] [--rounds N]
+                                                    [--seed S]
 
 Prints ``sim_scale,us,speedup=…,sats1000_ok=…`` CSV like the other
-benchmark sections.  ``bench_round_pipeline`` / ``bench_scale`` are also
-wrapped by the ``repro.bench`` registry (BENCH_sim.json baselines).
+benchmark sections.  ``bench_round_pipeline`` / ``bench_scale`` /
+``bench_lossy_round`` are also wrapped by the ``repro.bench`` registry
+(BENCH_sim.json baselines).
 """
 from __future__ import annotations
 
+import argparse
 import time
 
 import jax.numpy as jnp
@@ -29,6 +39,7 @@ from repro.constellation.links import LinkModel, message_bytes
 from repro.constellation.orbits import GroundStation, Walker
 from repro.constellation.scheduler import Scheduler, legacy_select
 from repro.kernels.compress_pipeline import quant_pipeline
+from repro.kernels.erasure_mask import erasure_mask
 from repro.kernels.pack_bits import pack_bits
 from repro.kernels.quantize_ef import quantize_ef
 from repro.sim import Engine, Scenario, get_scenario
@@ -146,7 +157,7 @@ def bench_round_pipeline(n_sats: int, rounds: int = 3,
             t += eng.run_round(t, MSG).duration
         return ()
 
-    t_engine = time_fn(_engine_pass, reps=5)
+    t_engine = time_fn(_engine_pass, reps=7)
 
     vals = np.random.default_rng(seed).normal(
         0.0, 0.3, (sc.walker.n_sats, DIM)).astype(np.float32)
@@ -157,7 +168,7 @@ def bench_round_pipeline(n_sats: int, rounds: int = 3,
     # background noise
     t_unfused, t_fused = time_pair(
         lambda: _uplink_unfused(vals, results),
-        lambda: _uplink_fused(vals, results), reps=5)
+        lambda: _uplink_fused(vals, results), reps=9)
 
     round_unfused = (t_engine + t_unfused) / rounds
     round_fused = (t_engine + t_fused) / rounds
@@ -171,9 +182,100 @@ def bench_round_pipeline(n_sats: int, rounds: int = 3,
     }
 
 
-def main(quick: bool = False) -> float:
+def bench_lossy_round(n_sats: int = 1000, rounds: int = 3,
+                      seed: int = 0, p_loss: float = 0.1) -> dict:
+    """Lossy-channel round cost + on-device lossy uplink transport.
+
+    Two measurements over matched scenarios (``mega-1000`` vs
+    ``mega-1000-lossy`` at the 1000-sat scale, flat erasure otherwise):
+
+    * **channel overhead** — engine round time with the ARQ/counter-hash
+      channel vs the lossless fixed-time path (same contact plans, same
+      policy; the delta is the ARQ state machine + hash draws);
+    * **on-device lossy transport** — per contact-window cohort, the
+      fused quant_pipeline→erasure_mask chain (2 dispatches) vs the
+      historical quantize_ef→pack_bits→erasure_mask chain (3 dispatches)
+      over the same delivery trajectory.  The speedup is the gated,
+      machine-independent ratio.
+    """
+    from repro.bench.timing import time_pair
+    from repro.channel import ChannelModel, SelectiveRepeatARQ
+
+    if n_sats >= 1000:
+        sc_clean = get_scenario("mega-1000")
+        sc_lossy = get_scenario("mega-1000-lossy")
+    else:
+        sc_clean = _scenario(n_sats)
+        sc_lossy = Scenario(
+            name=f"scale-{n_sats}-lossy", walker=sc_clean.walker,
+            stations=sc_clean.stations,
+            channel=ChannelModel(loss=p_loss,
+                                 arq=SelectiveRepeatARQ(max_rounds=4)))
+    eng_clean = Engine(sc_clean, seed=seed)
+    eng_lossy = Engine(sc_lossy, seed=seed)
+
+    def _rounds(eng):
+        t, res = 0.0, []
+        for _ in range(rounds):
+            r = eng.run_round(t, MSG)
+            t += r.duration
+            res.append(r)
+        return res
+
+    results = _rounds(eng_lossy)       # warm plans + delivery trajectory
+    _rounds(eng_clean)
+    t_clean, t_lossy = time_pair(lambda: _rounds(eng_clean),
+                                 lambda: _rounds(eng_lossy), reps=7)
+
+    n_attempt = sum(len(r.deliveries) for r in results)
+    n_lost = sum(sum(not d.delivered for d in r.deliveries)
+                 for r in results)
+    retx = sum(sum(d.retries for d in r.deliveries) for r in results)
+
+    vals = np.random.default_rng(seed).normal(
+        0.0, 0.3, (sc_lossy.walker.n_sats, DIM)).astype(np.float32)
+    vals = jnp.asarray(vals)
+
+    def _lossy_fused():
+        out = None
+        for res in results:
+            for cohort in res.cohorts():
+                stack = vals[np.asarray(cohort.sats)]
+                words, _ = quant_pipeline(stack, jnp.zeros_like(stack),
+                                          levels=LEVELS, vmin=VMIN,
+                                          vmax=VMAX, interpret=True)
+                out, _ = erasure_mask(words, p=p_loss, seed=seed,
+                                      interpret=True)
+        return out
+
+    def _lossy_unfused():
+        out = None
+        zeros = jnp.zeros((DIM,), jnp.float32)
+        for res in results:
+            for d in res.deliveries:
+                wire, _ = quantize_ef(vals[d.sat], zeros, levels=LEVELS,
+                                      vmin=VMIN, vmax=VMAX, interpret=True)
+                words = pack_bits(wire, 8, interpret=True)
+                out, _ = erasure_mask(words, p=p_loss, seed=seed,
+                                      interpret=True)
+        return out
+
+    t_unfused, t_fused = time_pair(_lossy_unfused, _lossy_fused, reps=9)
+    return {
+        "n_sats": sc_lossy.walker.n_sats, "rounds": rounds,
+        "attempted": n_attempt, "lost": n_lost, "retransmissions": retx,
+        "round_s_lossless": t_clean / rounds,
+        "round_s_lossy": t_lossy / rounds,
+        "channel_overhead": t_lossy / t_clean,
+        "uplink_s_unfused": t_unfused / rounds,
+        "uplink_s_fused": t_fused / rounds,
+        "lossy_uplink_speedup": t_unfused / t_fused,
+    }
+
+
+def main(quick: bool = False, rounds: int = 100, seed: int = 0) -> float:
     t_start = time.time()
-    rounds = 100      # the claim is defined at 100 rounds × 100 sats —
+    # the headline claim is defined at 100 rounds × 100 sats (--rounds)
     walker, gs, link = Walker(), GroundStation(), LinkModel()
     # shorter runs under-amortize the one-off contact-plan build
 
@@ -198,17 +300,36 @@ def main(quick: bool = False) -> float:
 
     # fused uplink pipeline vs per-satellite dispatch chain (claim 3)
     n_pipe = 100 if quick else 1000
-    r = bench_round_pipeline(n_pipe, rounds=2 if quick else 3)
+    r = bench_round_pipeline(n_pipe, rounds=2 if quick else 3, seed=seed)
     print(f"  round pipeline @ {n_pipe} sats: unfused "
           f"{r['round_s_unfused']:.3f}s/round  fused "
           f"{r['round_s_fused']:.3f}s/round  "
           f"speedup {r['speedup']:.1f}x ({r['deliveries']} deliveries)")
 
+    # lossy channel: round overhead + on-device lossy uplink (claim 4)
+    rl = bench_lossy_round(100 if quick else 1000,
+                           rounds=2 if quick else 3, seed=seed)
+    print(f"  lossy round @ {rl['n_sats']} sats: lossless "
+          f"{rl['round_s_lossless']:.3f}s/round  lossy "
+          f"{rl['round_s_lossy']:.3f}s/round  (overhead "
+          f"{rl['channel_overhead']:.2f}x, {rl['lost']} lost, "
+          f"{rl['retransmissions']} retx)  lossy-uplink fused speedup "
+          f"{rl['lossy_uplink_speedup']:.1f}x")
+
     us = (time.time() - t_start) * 1e6
     print(f"sim_scale,{us:.0f},speedup={speedup:.1f},sats1000_ok={ok_1000},"
-          f"pipeline_speedup={r['speedup']:.1f}")
+          f"pipeline_speedup={r['speedup']:.1f},"
+          f"lossy_overhead={rl['channel_overhead']:.2f}")
     return speedup
 
 
 if __name__ == "__main__":
-    main()
+    p = argparse.ArgumentParser(description=__doc__)
+    p.add_argument("--quick", action="store_true",
+                   help="reduced scales: 2-3 rounds, 100-sat pipeline")
+    p.add_argument("--rounds", type=int, default=100,
+                   help="scheduling rounds for the contact-plan claim")
+    p.add_argument("--seed", type=int, default=0,
+                   help="engine / RNG seed for the pipeline benchmarks")
+    args = p.parse_args()
+    main(quick=args.quick, rounds=args.rounds, seed=args.seed)

@@ -4,10 +4,14 @@ A 100-satellite Walker constellation over a polar ground station, driven
 through the discrete-event engine: the contact-plan scheduler picks ~12
 satellites per round (direct GS windows + multi-hop ISL-forwarded
 neighbours).  Compares Fed-LTSat against space-ified FedAvg under coarse
-quantization + EF in synchronous mode, then runs Fed-LTSat in
+quantization + EF in synchronous mode — Fed-LTSat on the fused
+compress→EF→pack uplink (``FedLT(fused_uplink=True)``: one Pallas kernel
+dispatch per leaf over the whole agent stack) with per-cohort byte
+accounting (``SpaceRunner(measure="cohort")``) — then runs Fed-LTSat in
 buffered-asynchronous (FedBuff-style, staleness-weighted) mode on the
-dual-station scenario — reporting error vs wall-clock time and uplink
-bytes for each.
+dual-station scenario, and finally over the ``lossy-uplink`` channel
+scenario with loss-robust error feedback.  Reports error vs wall-clock
+time and uplink bytes for each.
 
 Run:  PYTHONPATH=src python examples/satellite_constellation.py
 """
@@ -38,20 +42,27 @@ def main(rounds=120):
             if log.error is not None:
                 extra = (f"  stale={log.staleness:.2f}"
                          if log.staleness is not None else "")
+                if log.n_lost:
+                    extra += f"  lost={log.n_lost}"
                 print(f"  round {log.round:4d}  t={log.time/3600:6.2f}h  "
                       f"up={log.bytes_up/1e3:8.1f}kB  active={log.n_active:3d}  "
                       f"e_k={log.error:.5f}{extra}")
 
     algs = {
+        # fused_uplink=True: the compress→EF→pack chain runs as ONE Pallas
+        # sweep over the whole agent stack (EFChannel.send_fused) instead
+        # of a vmapped per-satellite chain
         "Fed-LTSat": FedLT(loss=loss, n_epochs=10, gamma=0.005, rho=20.0,
-                           uplink=up, downlink=down),
+                           uplink=up, downlink=down, fused_uplink=True),
         "FedAvg(space)": FedAvg(loss=loss, n_epochs=10, gamma=0.05,
                                 uplink=up, downlink=down),
     }
     engine = Engine(get_scenario("walker-kiruna"))
     for name, alg in algs.items():
         st = alg.init(jnp.zeros((dim,)), n_agents)
-        runner = SpaceRunner(engine, compressor=quant)
+        # measure="cohort": bytes_up accounted from the actually-transmitted
+        # wire state, batched per contact-window cohort
+        runner = SpaceRunner(engine, compressor=quant, measure="cohort")
         st, logs = runner.run(alg, st, data, rounds, jax.random.PRNGKey(2),
                               error_fn=lambda s: optimality_error(s.x, x_star),
                               log_every=20)
@@ -67,6 +78,17 @@ def main(rounds=120):
                           error_fn=lambda s: optimality_error(s.x, x_star),
                           log_every=20)
     report("Fed-LTSat (async, dual-station)", logs)
+
+    # lossy uplink: 10% segment erasures with selective-repeat ARQ; lost
+    # updates keep their EF residual (loss-robust EF) so their content
+    # telescopes into the next successful pass
+    st = alg.init(jnp.zeros((dim,)), n_agents)
+    runner = SpaceRunner(Engine(get_scenario("lossy-uplink")),
+                         compressor=quant, measure="cohort")
+    st, logs = runner.run(alg, st, data, rounds, jax.random.PRNGKey(4),
+                          error_fn=lambda s: optimality_error(s.x, x_star),
+                          log_every=20)
+    report("Fed-LTSat (lossy uplink, loss-robust EF)", logs)
 
 
 if __name__ == "__main__":

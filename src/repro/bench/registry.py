@@ -172,6 +172,38 @@ def _sim_round_pipeline(tiny: bool) -> Dict[str, dict]:
 
 
 @register_benchmark(
+    "sim.lossy_round", "sim",
+    "stochastic lossy-channel round: ARQ/erasure engine overhead vs the "
+    "lossless path, plus on-device lossy uplink transport (fused "
+    "quant_pipeline→erasure_mask vs the unfused three-dispatch chain)")
+def _sim_lossy_round(tiny: bool) -> Dict[str, dict]:
+    from benchmarks.sim_scale import bench_lossy_round
+    # like sim.round_pipeline, the 1000-sat scenario runs even in the tiny
+    # CI set: its fused-vs-unfused lossy-uplink ratio is the gated claim
+    scales = [64, 1000]
+    out: Dict[str, dict] = {}
+    for n in scales:
+        r = bench_lossy_round(n, rounds=3)
+        p = f"n{n}_"
+        out[p + "round_s_lossless"] = metric(r["round_s_lossless"],
+                                             "s/round",
+                                             higher_is_better=False)
+        out[p + "round_s_lossy"] = metric(r["round_s_lossy"], "s/round",
+                                          higher_is_better=False)
+        # host-side ARQ + counter-hash cost; informational — it depends on
+        # how many deliveries the trajectory happens to contain
+        out[p + "channel_overhead"] = metric(r["channel_overhead"], "x",
+                                             higher_is_better=False)
+        out[p + "lossy_uplink_speedup"] = metric(
+            r["lossy_uplink_speedup"], "x", higher_is_better=True,
+            gate=(n == 1000))
+        out[p + "lost_frac"] = metric(
+            r["lost"] / max(r["attempted"], 1), "frac",
+            higher_is_better=False)
+    return out
+
+
+@register_benchmark(
     "sim.engine_scale", "sim",
     "discrete-event engine throughput (cold plan build + sync rounds + "
     "async deliveries) at 100/1000/10000-satellite scale")

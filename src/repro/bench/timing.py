@@ -1,6 +1,18 @@
-"""Warmup/timing utilities shared by the registered benchmarks."""
+"""Warmup/timing utilities shared by the registered benchmarks.
+
+Timed regions run with the cyclic garbage collector DISABLED (after one
+up-front ``gc.collect()``): dispatch-heavy benchmark bodies allocate
+thousands of small host objects, and whether a GC generation threshold
+happens to trip inside the timed region depends on how much heap the
+*previously run* benchmarks left behind — which made gated ratios depend
+on registry order and on full-vs-tiny runs.  Pinning GC out of the timed
+window removes that coupling; the collector is restored (and run once)
+afterwards.
+"""
 from __future__ import annotations
 
+import contextlib
+import gc
 import time
 from typing import Callable
 
@@ -14,6 +26,20 @@ def _block(x) -> None:
         pass
 
 
+@contextlib.contextmanager
+def _gc_pinned():
+    """Collect once, then keep the cyclic GC out of the timed region."""
+    was_enabled = gc.isenabled()
+    gc.collect()
+    gc.disable()
+    try:
+        yield
+    finally:
+        if was_enabled:
+            gc.enable()
+            gc.collect()
+
+
 def time_fn(fn: Callable, *, reps: int = 5, warmup: int = 1) -> float:
     """Seconds per call of ``fn()``: ``warmup`` untimed calls (compile /
     cache fill), then the MINIMUM of ``reps`` timed calls — the robust
@@ -23,10 +49,11 @@ def time_fn(fn: Callable, *, reps: int = 5, warmup: int = 1) -> float:
     for _ in range(warmup):
         _block(fn())
     best = float("inf")
-    for _ in range(max(reps, 1)):
-        t0 = time.perf_counter()
-        _block(fn())
-        best = min(best, time.perf_counter() - t0)
+    with _gc_pinned():
+        for _ in range(max(reps, 1)):
+            t0 = time.perf_counter()
+            _block(fn())
+            best = min(best, time.perf_counter() - t0)
     return best
 
 
@@ -43,13 +70,14 @@ def time_pair(fn_a: Callable, fn_b: Callable, *, reps: int = 7,
         _block(fn_a())
         _block(fn_b())
     best_a = best_b = float("inf")
-    for _ in range(max(reps, 1)):
-        t0 = time.perf_counter()
-        _block(fn_a())
-        best_a = min(best_a, time.perf_counter() - t0)
-        t0 = time.perf_counter()
-        _block(fn_b())
-        best_b = min(best_b, time.perf_counter() - t0)
+    with _gc_pinned():
+        for _ in range(max(reps, 1)):
+            t0 = time.perf_counter()
+            _block(fn_a())
+            best_a = min(best_a, time.perf_counter() - t0)
+            t0 = time.perf_counter()
+            _block(fn_b())
+            best_b = min(best_b, time.perf_counter() - t0)
     return best_a, best_b
 
 

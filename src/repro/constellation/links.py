@@ -10,6 +10,11 @@ the byte count:
 
 The simulator (``repro.sim.engine``) and :class:`repro.core.fedlt_sat.
 SpaceRunner` use measured bytes whenever the compressor has a wire codec.
+
+These rates are *fixed* — an elevation-dependent profile (slant-range
+link budget, SNR → BER → erasure probability) lives in
+:mod:`repro.channel.budget`; a :class:`repro.channel.ChannelModel` with
+``budget=None`` falls back to this fixed-rate model exactly.
 """
 from __future__ import annotations
 

@@ -37,17 +37,20 @@ import numpy as np
 
 from ..constellation.links import message_bytes
 from .compression import Compressor
-from .pytree import tree_map, tree_size, tree_split_keys
+from .pytree import tree_map, tree_size, tree_split_keys, tree_where_mask
 
 
 @dataclasses.dataclass
 class RoundLog:
     round: int
     time: float            # wall-clock seconds since start
-    bytes_up: float        # cumulative uplink bytes over GS links
-    n_active: int
+    bytes_up: float        # cumulative uplink bytes over GS links (air
+    #                        bytes: with a lossy channel this counts
+    #                        retransmissions and truncated attempts too)
+    n_active: int          # updates the coordinator actually received
     error: Optional[float] = None
     staleness: Optional[float] = None   # async: mean staleness this round
+    n_lost: int = 0        # attempted uplinks the channel destroyed
 
 
 @dataclasses.dataclass(frozen=True, eq=False)
@@ -57,6 +60,15 @@ class SpaceRunner:
     ``engine`` is a :class:`repro.sim.engine.Engine`; a bare
     :class:`~repro.constellation.scheduler.Scheduler` is also accepted and
     wrapped in an engine over its own single-station scenario.
+
+    With a lossy channel (``channel=`` here or on the engine's scenario),
+    sync rounds distinguish *attempted* from *delivered* uplinks: lost
+    satellites still train and pay air time, the coordinator's received
+    wire reverts, and — with ``loss_robust=True`` and an EF-caching
+    algorithm — the uplink residual reverts too, so the cached content
+    telescopes into the next successful transmission instead of being
+    discharged into a wire that never landed
+    (:func:`_revert_lost_wires`).
     """
 
     engine: object
@@ -65,6 +77,15 @@ class SpaceRunner:
     buffer_size: int = 8         # async: aggregate every M landed updates
     staleness_alpha: float = 0.5  # async: wire weight (1+s)^(-alpha)
     compressor: Optional[Compressor] = None  # → measured WireMessage bytes
+    # lossy channel (repro.channel.ChannelModel): installed on the engine;
+    # an engine whose Scenario already carries one needs no argument here
+    channel: Optional[object] = None
+    # loss-robust error feedback (sync mode): when the channel destroys an
+    # uplink, the satellite's EF residual reverts instead of being
+    # discharged into the lost wire — the cached content telescopes into
+    # the next successful transmission instead of vanishing.  Needs an
+    # algorithm with an uplink cache (``c_up``).
+    loss_robust: bool = True
     # byte measurement:
     #   "probe"  — encode ONE representative message up front; every
     #              delivery is accounted at that size (seed behavior)
@@ -80,6 +101,11 @@ class SpaceRunner:
     def __post_init__(self):
         if hasattr(self.engine, "select") and not hasattr(self.engine, "run_round"):
             object.__setattr__(self, "engine", self.engine._engine())
+        if self.channel is not None:
+            # install on the (mutable) engine so every transmission the
+            # engine commits runs through the lossy-channel ARQ
+            self.engine.channel = self.channel
+            self.engine._refresh_blocked()   # conjunction blackouts
         if self.mode not in ("sync", "async"):
             raise ValueError(f"mode must be 'sync' or 'async', got {self.mode!r}")
         if self.measure not in ("probe", "cohort"):
@@ -164,25 +190,55 @@ class SpaceRunner:
         msg = self._msg_bytes(state)
         use_cohorts = (self.measure == "cohort" and self.compressor is not None
                        and self.compressor.wire_codec() is not None)
+        channel = getattr(self.engine, "channel", None)
+        wire_field = "z_hat" if hasattr(state, "z_hat") else "m_hat"
+        has_cache = hasattr(state, "c_up")
         round_fn = jax.jit(alg.round)
         t, up_bytes = 0.0, 0.0
         logs: List[RoundLog] = []
         keys = jax.random.split(key, n_rounds)
         for k in range(n_rounds):
             res = self.engine.run_round(t, msg)
-            active_np = res.mask
-            state, _ = round_fn(state, data, jnp.asarray(active_np), keys[k])
+            delivered = res.mask
+            attempted = np.zeros_like(delivered)
+            for d in res.deliveries:
+                attempted[d.sat] = True
+            lost = attempted & ~delivered
+            lossy = channel is not None and bool(lost.any())
+            # with a lossy channel the satellites that transmitted-but-lost
+            # still trained and paid the uplink: they participate in the
+            # round, then the coordinator-side wire is reverted below
+            # (the coordinator can only know what actually landed)
+            active_np = attempted if lossy else delivered
+            state_new, _ = round_fn(state, data, jnp.asarray(active_np),
+                                    keys[k])
+            # what each satellite actually put on the air this round — for
+            # lost satellites that is the PRE-revert wire, so cohort byte
+            # accounting below must measure this state, not the final one
+            tx_state = state_new
+            if lossy:
+                state_new = _revert_lost_wires(
+                    state_new, state, wire_field, jnp.asarray(lost),
+                    absorb=self.loss_robust and has_cache)
+            state = state_new
             t += res.duration
-            # bytes_up = what actually crossed the GS links this round
+            # bytes_up = what actually crossed the GS links this round —
+            # air bytes, i.e. retransmissions and truncated attempts count
             if use_cohorts:
-                up_bytes += sum(
-                    self._cohort_nbytes(state, res.cohorts()).values())
+                per_sat = self._cohort_nbytes(tx_state, res.cohorts())
+                if channel is not None:
+                    up_bytes += sum(
+                        per_sat[d.sat] * (d.nbytes_attempted / msg)
+                        for d in res.deliveries)
+                else:
+                    up_bytes += sum(per_sat.values())
             else:
-                up_bytes += sum(d.nbytes for d in res.deliveries)
+                up_bytes += sum(d.nbytes_attempted for d in res.deliveries)
             err = (float(error_fn(state))
                    if error_fn is not None and (k % log_every == 0
                                                 or k == n_rounds - 1) else None)
-            logs.append(RoundLog(k, t, up_bytes, int(active_np.sum()), err))
+            logs.append(RoundLog(k, t, up_bytes, int(delivered.sum()), err,
+                                 n_lost=int(lost.sum())))
         return state, logs
 
     # -- buffered-async (FedBuff-style) -------------------------------------
@@ -192,8 +248,13 @@ class SpaceRunner:
         n_agents = jax.tree_util.tree_leaves(state.x)[0].shape[0]
         wire_field = "z_hat" if hasattr(state, "z_hat") else "m_hat"
 
-        deliveries = self.engine.run_async(
+        records = self.engine.run_async(
             0.0, msg, n_deliveries=n_rounds * self.buffer_size)
+        # only landed updates feed the aggregator; with a lossy channel the
+        # record list also holds failed attempts, whose air bytes still
+        # count toward the uplink ledger below
+        deliveries = [d for d in records if d.delivered]
+        rec_ptr = 0
         agg_times: List[float] = []
         logs: List[RoundLog] = []
         up_bytes = 0.0
@@ -216,13 +277,47 @@ class SpaceRunner:
                                 jnp.asarray(weights))
             t = chunk[-1].t_done
             agg_times.append(t)
-            up_bytes += sum(d.nbytes for d in chunk)
+            while rec_ptr < len(records) and records[rec_ptr].t_done <= t:
+                up_bytes += records[rec_ptr].nbytes_attempted
+                rec_ptr += 1
             err = (float(error_fn(state))
                    if error_fn is not None and (k % log_every == 0
                                                 or k == n_rounds - 1) else None)
             logs.append(RoundLog(k, t, up_bytes, int(active_np.sum()), err,
                                  staleness=float(stale[active_np].mean())))
         return state, logs
+
+
+def _revert_lost_wires(new_state, old_state, field: str, lost,
+                       *, absorb: bool):
+    """Coordinator-side fix-up for channel-destroyed uplinks.
+
+    The round ran with the lost satellites active (they trained and
+    transmitted), but the coordinator never received their wire: its
+    received-wire slot (``z_hat``/``m_hat``) reverts to the previous
+    value.
+
+    With ``absorb=True`` (loss-robust EF) the satellite's uplink residual
+    also reverts: ``c_up ← c_up_old``.  The EF cache update
+    ``c ← (msg + c_old) − wire`` discharges the cached residual into the
+    wire — legitimate only if the wire *lands*.  Reverting on loss keeps
+    the residual (plus the quantization error it was carrying) in the
+    cache, so the lost round's content telescopes into the agent's next
+    successful transmission exactly as if the round had never been
+    scheduled; per-agent, EF runs over the subsequence of successful
+    uplinks, which is what the paper's telescoping argument (§2.2) needs.
+    Without the revert (``absorb=False`` — naive lossy EF) the cache
+    wrongly believes the wire was delivered and the residual vanishes
+    from the bookkeeping.
+    """
+    wire_new = getattr(new_state, field)
+    wire_old = getattr(old_state, field)
+    out = new_state._replace(
+        **{field: tree_where_mask(lost, wire_old, wire_new)})
+    if absorb:
+        out = out._replace(c_up=tree_where_mask(lost, old_state.c_up,
+                                                new_state.c_up))
+    return out
 
 
 def _damp_wires(new_state, old_state, field: str, weights):

@@ -1,0 +1,113 @@
+"""Pallas counter-based-RNG erasure-mask kernel over packed wire words.
+
+Device-side sibling of the host ARQ model (:mod:`repro.channel`): given
+the uint32 word stream produced by the fused compress→EF→pack pipeline
+(:mod:`repro.kernels.compress_pipeline` / :mod:`repro.kernels.pack_bits`),
+decide — per *segment* of ``segment_words`` consecutive words — whether
+the channel erased it, and zero the erased words in one VMEM sweep.  The
+whole lossy transport of a cohort's stacked uplink therefore stays
+on-device: compress → EF → pack → erase, no host round-trip.
+
+Counter-based RNG
+-----------------
+The fate of word ``i`` depends only on ``(seed, i // segment_words)``:
+a murmur3-style 32-bit finalizer hashes the segment counter, and the
+segment is erased when ``hash < ⌊p·2³²⌋``.  No state, no key threading —
+the same (seed, counter) always gives the same decision, on any backend,
+for any grid/tile decomposition, which is exactly the property the
+host-side :func:`repro.channel.outage.counter_uniform` draws rely on.
+The kernel is pure element-wise VPU work: an iota over flat word indices,
+integer mixing, one compare, one select.
+
+Outputs are the masked words plus the per-word keep mask (uint32 0/1) so
+callers can reduce per-satellite survival (`all segments kept?`) without
+re-deriving the hash.  ``ref.erasure_mask_ref`` is the pure-jnp oracle;
+the kernel must match it word-for-word.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BLOCK_M = 256
+LANES = 128
+
+_GOLD = 0x9E3779B9          # 2³²/φ — decorrelates consecutive counters
+
+
+def drop_threshold(p: float) -> int:
+    """uint32 threshold: segment erased iff hash < threshold."""
+    return min(max(int(round(float(p) * 4294967296.0)), 0), 4294967295)
+
+
+def _mix32(x):
+    """murmur3 fmix32 finalizer (uint32 avalanche)."""
+    x = x ^ (x >> jnp.uint32(16))
+    x = x * jnp.uint32(0x85EBCA6B)
+    x = x ^ (x >> jnp.uint32(13))
+    x = x * jnp.uint32(0xC2B2AE35)
+    x = x ^ (x >> jnp.uint32(16))
+    return x
+
+
+def segment_hash(idx, seed: int):
+    """Counter hash of flat word indices ``idx`` (uint32) under ``seed``."""
+    h = idx * jnp.uint32(_GOLD) + jnp.uint32(seed & 0xFFFFFFFF)
+    return _mix32(_mix32(h) ^ jnp.uint32((seed >> 32) & 0xFFFFFFFF))
+
+
+def _erasure_kernel(words_ref, out_ref, keep_ref, *, seed, thresh,
+                    segment_words):
+    i = pl.program_id(0)
+    row = jax.lax.broadcasted_iota(jnp.uint32, (BLOCK_M, LANES), 0)
+    lane = jax.lax.broadcasted_iota(jnp.uint32, (BLOCK_M, LANES), 1)
+    flat = (jnp.uint32(i) * jnp.uint32(BLOCK_M) + row) * jnp.uint32(LANES) \
+        + lane
+    seg = flat // jnp.uint32(segment_words)
+    keep = (segment_hash(seg, seed) >= jnp.uint32(thresh)).astype(jnp.uint32)
+    out_ref[...] = words_ref[...] * keep
+    keep_ref[...] = keep
+
+
+@functools.partial(jax.jit, static_argnames=("p", "seed", "segment_words",
+                                             "interpret"))
+def erasure_mask(words, *, p: float, seed: int = 0, segment_words: int = 32,
+                 interpret: bool = True):
+    """Erase segments of a packed word stream → (masked words, keep mask).
+
+    ``words``: any-shape uint32 array, flattened in C order; segment ``s``
+    covers flat words ``[s·segment_words, (s+1)·segment_words)``.  Each
+    segment is independently erased with probability ``p`` (decision =
+    counter hash of the segment index under ``seed``); erased words are
+    zeroed.  Returns ``(masked, keep)`` with ``keep`` uint32 0/1 per word,
+    both in the input's shape.
+    """
+    if segment_words < 1:
+        raise ValueError(f"segment_words must be >= 1, got {segment_words}")
+    shape = words.shape
+    n = words.size
+    flat = words.reshape(-1).astype(jnp.uint32)
+    tile = BLOCK_M * LANES
+    pad = (-n) % tile
+    if pad:
+        flat = jnp.pad(flat, (0, pad))
+    rows = flat.size // LANES
+    w2 = flat.reshape(rows, LANES)
+    grid = (rows // BLOCK_M,)
+    masked, keep = pl.pallas_call(
+        functools.partial(_erasure_kernel, seed=seed,
+                          thresh=drop_threshold(p),
+                          segment_words=segment_words),
+        grid=grid,
+        in_specs=[pl.BlockSpec((BLOCK_M, LANES), lambda i: (i, 0))],
+        out_specs=[pl.BlockSpec((BLOCK_M, LANES), lambda i: (i, 0)),
+                   pl.BlockSpec((BLOCK_M, LANES), lambda i: (i, 0))],
+        out_shape=[jax.ShapeDtypeStruct(w2.shape, jnp.uint32),
+                   jax.ShapeDtypeStruct(w2.shape, jnp.uint32)],
+        interpret=interpret,
+    )(w2)
+    return (masked.reshape(-1)[:n].reshape(shape),
+            keep.reshape(-1)[:n].reshape(shape))

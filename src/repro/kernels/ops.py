@@ -10,6 +10,7 @@ import jax
 from . import ref
 from .compress_pipeline import quant_pipeline as _quant_pipeline
 from .compress_pipeline import sign_pipeline as _sign_pipeline
+from .erasure_mask import erasure_mask as _erasure_mask
 from .flash_attention import flash_attention as _flash
 from .pack_bits import pack_bits as _pack_bits
 from .pack_bits import unpack_bits as _unpack_bits
@@ -62,6 +63,17 @@ def sign_pipeline(msg, cache, *, use_pallas: bool = True):
     if not use_pallas:
         return ref.sign_pipeline_ref(msg, cache)
     return _sign_pipeline(msg, cache, interpret=_interpret())
+
+
+def erasure_mask(words, *, p: float, seed: int = 0, segment_words: int = 32,
+                 use_pallas: bool = True):
+    """Counter-based segment erasure over packed wire words → (masked,
+    keep mask).  Lossy transport of the fused uplink, on-device."""
+    if not use_pallas:
+        return ref.erasure_mask_ref(words, p=p, seed=seed,
+                                    segment_words=segment_words)
+    return _erasure_mask(words, p=p, seed=seed, segment_words=segment_words,
+                         interpret=_interpret())
 
 
 def attention(q, k, v, *, causal=True, window=None, softcap=None,

@@ -87,6 +87,24 @@ def sign_pipeline_ref(msg, cache):
     return words, scale, new_cache
 
 
+def erasure_mask_ref(words, *, p: float, seed: int = 0,
+                     segment_words: int = 32):
+    """Pure-jnp oracle for :func:`repro.kernels.erasure_mask.erasure_mask`.
+
+    Same counter hash (murmur3 fmix32 of the segment index under the
+    seed), same ``⌊p·2³²⌋`` threshold — the kernel must reproduce the
+    masked words and the keep mask bit-for-bit.
+    """
+    from .erasure_mask import drop_threshold, segment_hash
+    shape = words.shape
+    flat = words.reshape(-1).astype(jnp.uint32)
+    idx = jnp.arange(flat.size, dtype=jnp.uint32)
+    seg = idx // jnp.uint32(segment_words)
+    keep = (segment_hash(seg, seed)
+            >= jnp.uint32(drop_threshold(p))).astype(jnp.uint32)
+    return (flat * keep).reshape(shape), keep.reshape(shape)
+
+
 def flash_attention_ref(q, k, v, *, causal: bool = True, window=None,
                         softcap=None):
     """q,k,v: (B, S, H, D) (same kv heads — GQA expansion done by caller).

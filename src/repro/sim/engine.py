@@ -50,7 +50,8 @@ from .routing import Router
 @dataclasses.dataclass(frozen=True, eq=False)
 class Scenario:
     """A complete simulation setting — constellation, stations, links,
-    per-satellite compute, weather."""
+    per-satellite compute, weather, and (optionally) a stochastic lossy
+    channel (:class:`repro.channel.ChannelModel`)."""
     name: str = "walker-kiruna"
     walker: Walker = Walker()
     stations: Tuple[GroundStation, ...] = (GroundStation(),)
@@ -62,6 +63,7 @@ class Scenario:
     max_hops: int = 4
     lookahead: float = 7200.0   # scheduling horizon per round
     dt: float = 10.0            # contact-plan grid resolution
+    channel: Optional[object] = None  # repro.channel.ChannelModel or None
 
     def compute_of(self, sat: int) -> float:
         if np.ndim(self.compute_time) == 0:
@@ -81,8 +83,12 @@ class Delivery:
     gateway: int        # satellite that performed the GS uplink
     station: int        # ground-station index
     hops: int           # ISL hops travelled
-    nbytes: float = 0.0  # measured on-wire size of the delivered update
+    nbytes: float = 0.0  # payload bytes usefully delivered (0 on failure)
     window: float = float("nan")  # rise time of the contact window used
+    # lossy-channel accounting (== nbytes / 0 / True without a channel):
+    nbytes_attempted: float = 0.0  # bytes put on the air, retx included
+    retries: int = 0               # ARQ rounds beyond the first
+    delivered: bool = True         # all segments landed (False: lost/truncated)
 
 
 @dataclasses.dataclass
@@ -153,6 +159,7 @@ class Engine:
     def __init__(self, scenario: Scenario, policy=None, seed: int = 0):
         self.scenario = scenario
         self.seed = seed
+        self.channel = scenario.channel   # repro.channel.ChannelModel | None
         self.plan = ContactPlan(scenario.walker, scenario.stations,
                                 horizon=max(2 * scenario.lookahead, 7200.0),
                                 dt=scenario.dt)
@@ -169,36 +176,55 @@ class Engine:
                                max_hops=scenario.max_hops)
         self.policy = policy
 
-    # -- contact-plan / weather plumbing ----------------------------------
+    # -- contact-plan / weather / outage plumbing --------------------------
     def _refresh_blocked(self) -> None:
-        """Recompute the weather mask aligned with the plan's window arrays.
+        """Recompute the blocked-window mask aligned with the plan's window
+        arrays: weather dropout plus channel conjunction blackouts.
 
         Blocked-ness is a DETERMINISTIC hash of (seed, station, sat, window
         rise time), not a fresh draw — so extending the plan horizon never
         retroactively flips the availability of a window the simulation
-        already consulted."""
-        if self.scenario.dropout <= 0.0:
+        already consulted.  Conjunction blackouts
+        (:class:`repro.channel.outage.ConjunctionBlackout` on the
+        scenario's channel) are deterministic functions of the rise time
+        and layer into the same mask: a window whose rise falls inside a
+        blackout is unusable."""
+        blackout = getattr(self.channel, "blackout", None)
+        if self.scenario.dropout <= 0.0 and blackout is None:
             self._blocked = [None] * self.plan.n_stations
             return
         blocked = []
         n = self.scenario.walker.n_sats
         sat_ids = np.arange(n, dtype=np.uint64)[:, None]
         for g, rises in enumerate(self.plan.rises):
-            # window identity: its rise index on the immutable time grid
-            k = np.where(np.isfinite(rises), rises / self.plan.dt, 0.0)
-            k = k.astype(np.uint64)
-            x = (k * np.uint64(0x9E3779B97F4A7C15)
-                 ^ sat_ids * np.uint64(0xBF58476D1CE4E5B9)
-                 ^ np.uint64(((g + 1) * 0x94D049BB133111EB) % 2**64)
-                 ^ np.uint64((self.seed * 2654435761 + 1) % 2**64))
-            # splitmix64 finalizer → uniform in [0, 1)
-            x ^= x >> np.uint64(30)
-            x *= np.uint64(0xBF58476D1CE4E5B9)
-            x ^= x >> np.uint64(27)
-            x *= np.uint64(0x94D049BB133111EB)
-            x ^= x >> np.uint64(31)
-            u = x.astype(np.float64) / float(2**64)
-            blocked.append(u < self.scenario.dropout)
+            finite = np.isfinite(rises)
+            if self.scenario.dropout > 0.0:
+                # hand-rolled splitmix64 over the window identity; kept
+                # verbatim (not repro.channel.outage.counter_uniforms,
+                # which chains its counters differently) so existing
+                # seeds keep producing the same weather patterns
+                # window identity: its rise index on the immutable time grid
+                k = np.where(finite, rises / self.plan.dt, 0.0)
+                k = k.astype(np.uint64)
+                x = (k * np.uint64(0x9E3779B97F4A7C15)
+                     ^ sat_ids * np.uint64(0xBF58476D1CE4E5B9)
+                     ^ np.uint64(((g + 1) * 0x94D049BB133111EB) % 2**64)
+                     ^ np.uint64((self.seed * 2654435761 + 1) % 2**64))
+                # splitmix64 finalizer → uniform in [0, 1)
+                x ^= x >> np.uint64(30)
+                x *= np.uint64(0xBF58476D1CE4E5B9)
+                x ^= x >> np.uint64(27)
+                x *= np.uint64(0x94D049BB133111EB)
+                x ^= x >> np.uint64(31)
+                u = x.astype(np.float64) / float(2**64)
+                b = u < self.scenario.dropout
+            else:
+                b = np.zeros(rises.shape, dtype=bool)
+            if blackout is not None:
+                phase = (np.where(finite, rises, 0.0)
+                         - g * blackout.station_phase) % blackout.period
+                b = b | (finite & (phase < blackout.duration))
+            blocked.append(b)
         self._blocked = blocked
 
     def ensure(self, t_end: float) -> None:
@@ -216,6 +242,48 @@ class Engine:
                            ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
         """Vectorized :meth:`usable_window` over all satellites."""
         return self.plan.next_windows_all(t, blocked=self._blocked)
+
+    # -- lossy-channel transmission ----------------------------------------
+    def _window_id(self, rise: float) -> int:
+        """Stable window identity for channel RNG counters: the rise index
+        on the immutable contact-plan time grid."""
+        return int(round(rise / self.plan.dt))
+
+    def tx_estimate(self, gateway: int, win, t: float, nbytes: float,
+                    gs_tx: float) -> float:
+        """Expected GS transmission time for window-fit checks.  The fixed
+        ``gs_tx`` without a channel; otherwise the channel's rate/loss-aware
+        estimate at the gateway's elevation (channel-aware scheduling)."""
+        if self.channel is None:
+            return gs_tx
+        sc = self.scenario
+        return self.channel.estimate_time(
+            sc.link, nbytes, walker=sc.walker,
+            station_obj=sc.stations[win[2]], gateway=gateway, t=t,
+            seed=self.seed, station=win[2],
+            window_id=self._window_id(win[0]))
+
+    def tx_commit(self, gateway: int, sat: int, win, t: float,
+                  nbytes: float, gs_tx: float) -> Tuple[float, dict]:
+        """Execute one GS uplink starting at ``t`` inside ``win``.
+
+        Returns ``(t_done, delivery_kwargs)`` — without a channel this is
+        the historical fixed-time transmission; with one it runs the
+        windowed selective-repeat ARQ, whose retransmissions consume real
+        window time and may truncate the delivery mid-window.
+        """
+        if self.channel is None:
+            return t + gs_tx, dict(nbytes=nbytes, nbytes_attempted=nbytes,
+                                   retries=0, delivered=True)
+        sc = self.scenario
+        res = self.channel.transmit(
+            sc.link, nbytes, walker=sc.walker,
+            station_obj=sc.stations[win[2]], gateway=gateway, sat=sat,
+            t_start=t, window_end=win[1], seed=self.seed, station=win[2],
+            window_id=self._window_id(win[0]))
+        return res.t_done, dict(nbytes=res.nbytes,
+                                nbytes_attempted=res.nbytes_attempted,
+                                retries=res.retries, delivered=res.delivered)
 
     # -- synchronous mode --------------------------------------------------
     def run_round(self, t0: float, msg_bytes: float) -> RoundResult:
@@ -261,7 +329,8 @@ class Engine:
                     st["win"] = None
                     return                      # undeliverable this round
                 start = max(t, win[0], station_free[win[2]])
-                if start + gs_tx <= win[1]:
+                if start + self.tx_estimate(g, win, start, msg_bytes,
+                                            gs_tx) <= win[1]:
                     break
                 win = self.usable_window(g, win[1])
             else:
@@ -274,9 +343,11 @@ class Engine:
                 return
             _, sat = st["queue"].pop(0)         # FIFO = arrival order
             st["busy"] = True
-            station_free[win[2]] = t + gs_tx
-            push(t + gs_tx, "tx_done", gw=g, sat=sat, station=win[2],
-                 win_rise=win[0])
+            t_done, outcome = self.tx_commit(g, sat, win, t, msg_bytes,
+                                             gs_tx)
+            station_free[win[2]] = t_done
+            push(t_done, "tx_done", gw=g, sat=sat, station=win[2],
+                 win_rise=win[0], outcome=outcome)
 
         while q:
             t, _, kind, kw = heapq.heappop(q)
@@ -298,13 +369,14 @@ class Engine:
                 deliveries.append(Delivery(
                     sat=s, t_done=t, t_start=t0, gateway=g,
                     station=kw["station"], hops=hops_of.get(s, 0),
-                    nbytes=msg_bytes, window=kw["win_rise"]))
+                    window=kw["win_rise"], **kw["outcome"]))
                 tx_state[g]["busy"] = False
                 try_tx(g, t)
 
         mask = np.zeros(n, dtype=bool)
         for d in deliveries:
-            mask[d.sat] = True
+            if d.delivered:
+                mask[d.sat] = True
         duration = (max(d.t_done for d in deliveries) - t0
                     if deliveries else sc.max_compute)
         return RoundResult(mask, float(duration), deliveries, scheduled, t0)
@@ -315,9 +387,13 @@ class Engine:
         """Free-running constellation: each satellite trains, ships its
         update (direct or multi-hop ISL), and retrains on delivery.
 
-        Returns the first ``n_deliveries`` deliveries in time order; stops
-        early at ``max_time`` simulated seconds past ``t0`` (default
-        ``100 × lookahead``) if windows run dry.
+        Returns delivery records in time order up to and including the
+        ``n_deliveries``-th *successful* one; stops early at ``max_time``
+        simulated seconds past ``t0`` (default ``100 × lookahead``) if
+        windows run dry.  With a lossy channel the list also contains the
+        failed attempts (``delivered=False``) interleaved at their
+        completion times — without one every record is a success, so the
+        result is exactly the first ``n_deliveries`` deliveries.
         """
         sc = self.scenario
         n = sc.walker.n_sats
@@ -388,7 +464,8 @@ class Engine:
                     park(st, t)
                     return
                 start = max(t, win[0], station_free[win[2]])
-                if start + gs_tx <= win[1]:
+                if start + self.tx_estimate(g, win, start, msg_bytes,
+                                            gs_tx) <= win[1]:
                     break
                 win = self.usable_window(g, win[1])
             else:
@@ -400,9 +477,11 @@ class Engine:
                 return
             meta = st["queue"].pop(0)
             st["busy"] = True
-            station_free[win[2]] = t + gs_tx
-            push(t + gs_tx, "tx_done", gw=g, sat=meta[1], hops=meta[2],
-                 station=win[2], win_rise=win[0])
+            t_done, outcome = self.tx_commit(g, meta[1], win, t, msg_bytes,
+                                             gs_tx)
+            station_free[win[2]] = t_done
+            push(t_done, "tx_done", gw=g, sat=meta[1], hops=meta[2],
+                 station=win[2], win_rise=win[0], outcome=outcome)
 
         def dispatch(s, t):
             route = choose_route(s, t)
@@ -417,7 +496,8 @@ class Engine:
             else:
                 push(t + isl_t, "isl_arrive", sat=s, gw=gw, hops=hops)
 
-        while q and len(deliveries) < n_deliveries:
+        n_ok = 0
+        while q and n_ok < n_deliveries:
             t, _, kind, kw = heapq.heappop(q)
             if t > horizon_cap:
                 break
@@ -436,12 +516,19 @@ class Engine:
                 deliveries.append(Delivery(
                     sat=s, t_done=t, t_start=train_start[s], gateway=g,
                     station=kw["station"], hops=kw["hops"],
-                    nbytes=msg_bytes, window=kw["win_rise"]))
+                    window=kw["win_rise"], **kw["outcome"]))
+                if kw["outcome"]["delivered"]:
+                    n_ok += 1
                 tx_state[g]["busy"] = False
                 try_tx(g, t)
-                # satellite picks up the fresh global model and retrains
+                # the satellite retrains either way: on success it picks up
+                # the fresh global model; on a lost uplink it moves on (its
+                # stale update is gone — sync mode's loss-robust EF has no
+                # async analogue yet)
                 train_start[s] = t
                 push(t + sc.compute_of(s), "train_done", sat=s)
 
-        # deliveries are appended in heap-pop order, i.e. sorted by t_done
-        return deliveries[:n_deliveries]
+        # records are appended in heap-pop order, i.e. sorted by t_done;
+        # the loop stops right after the n_deliveries-th success, so the
+        # lossless case returns exactly n_deliveries records
+        return deliveries

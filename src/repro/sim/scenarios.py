@@ -1,20 +1,38 @@
 """Named simulation scenarios — register your own with :func:`register`.
 
 A scenario bundles everything the engine needs: the Walker constellation,
-the ground-station set, the link budget, per-satellite compute times, and a
-weather/dropout model.  Built-ins cover the paper's default setting plus
-the harder regimes the realistic-space-scenario comparison needs:
+the ground-station set, the link budget, per-satellite compute times, a
+weather/dropout model, and (optionally) a stochastic lossy channel
+(:class:`repro.channel.ChannelModel`).  Built-ins cover the paper's
+default setting plus the harder regimes the realistic-space-scenario
+comparison needs:
 
-    walker-kiruna    the seed setting — 100 sats, one polar GS, uniform
-                     30 s compute, clear sky (parity baseline)
-    dual-station     Kiruna + Svalbard: twice the window supply
-    weather-dropout  dual-station with 25 % of contact windows blocked
-    hetero-compute   per-satellite compute times spread 15–60 s
-                     (deterministic pattern — no RNG in scenario defs)
-    mega-1000        1000 sats / 20 planes, three stations, 8 gateways
-                     per round — the scale target from the ROADMAP
-    mega-10000       10000 sats / 40 planes, 16 gateways per round — the
-                     dense mega-constellation regime (bench-only scale)
+    walker-kiruna       the seed setting — 100 sats, one polar GS, uniform
+                        30 s compute, clear sky (parity baseline)
+    dual-station        Kiruna + Svalbard: twice the window supply
+    weather-dropout     dual-station with 25 % of contact windows blocked
+    hetero-compute      per-satellite compute times spread 15–60 s
+                        (deterministic pattern — no RNG in scenario defs)
+    mega-1000           1000 sats / 20 planes, three stations, 8 gateways
+                        per round — the scale target from the ROADMAP
+    mega-10000          10000 sats / 40 planes, 16 gateways per round —
+                        the dense mega-constellation regime (bench-only)
+
+  lossy-channel scenarios (``Scenario.channel``, :mod:`repro.channel`):
+
+    lossy-uplink        walker-kiruna over a flat 10 % segment-erasure
+                        channel with selective-repeat ARQ (fixed rates) —
+                        the loss-robust-EF experiment setting
+    rain-fade           dual-station Ka-band: healthy clear-sky margin,
+                        but 40 % of windows suffer an exponential rain
+                        fade that crushes rate and erasure probability
+    ka-band-degraded    walker-kiruna on a marginal Ka-band budget —
+                        elevation-dependent rates; low passes are lossy,
+                        high passes clean
+    conjunction-outage  walker-kiruna with recurring conjunction
+                        blackouts masking whole contact windows
+    mega-1000-lossy     mega-1000 over the flat 10 % erasure channel —
+                        scale + loss combined
 
 Usage::
 
@@ -31,6 +49,8 @@ from typing import Callable, Dict, List
 
 import numpy as np
 
+from ..channel import (ChannelModel, ConjunctionBlackout, LinkBudget,
+                       RainFade, SelectiveRepeatARQ)
 from ..constellation.orbits import GroundStation, Walker
 from .engine import Scenario
 
@@ -102,3 +122,65 @@ def _mega_10000() -> Scenario:
                     walker=Walker(n_sats=10000, n_planes=40),
                     stations=(KIRUNA, SVALBARD, INUVIK),
                     k_direct=16, n_relay=4, max_hops=6)
+
+
+# ---------------------------------------------------------------------------
+# lossy-channel scenarios (repro.channel) — stochastic link impairments
+# layered on the contact windows.  All channel elements are deterministic
+# functions of (engine seed, station, sat, window), so factories stay
+# RNG-free as required.
+# ---------------------------------------------------------------------------
+
+@register("lossy-uplink")
+def _lossy_uplink() -> Scenario:
+    # the loss-robust-EF experiment setting (benchmarks/table_lossy_ef.py):
+    # fixed LinkModel rates, flat 10 % segment erasure, selective repeat
+    return Scenario(name="lossy-uplink", walker=Walker(), stations=(KIRUNA,),
+                    channel=ChannelModel(
+                        loss=0.10,
+                        arq=SelectiveRepeatARQ(seg_bytes=1024, max_rounds=4)))
+
+
+@register("rain-fade")
+def _rain_fade() -> Scenario:
+    # healthy clear-sky Ka-band margin; 40 % of windows carry an
+    # exponential rain fade (mean 8 dB) that crushes rate and raises the
+    # erasure probability for the whole pass
+    return Scenario(name="rain-fade", walker=Walker(),
+                    stations=(KIRUNA, SVALBARD),
+                    channel=ChannelModel(
+                        budget=LinkBudget(eirp_dbw=26.0),
+                        rain=RainFade(p_fade=0.4, mean_db=8.0)))
+
+
+@register("ka-band-degraded")
+def _ka_band_degraded() -> Scenario:
+    # marginal link budget: the elevation profile dominates — low passes
+    # are erasure-heavy and slow, near-zenith passes clean and fast
+    return Scenario(name="ka-band-degraded", walker=Walker(),
+                    stations=(KIRUNA,),
+                    channel=ChannelModel(budget=LinkBudget(eirp_dbw=22.0)))
+
+
+@register("conjunction-outage")
+def _conjunction_outage() -> Scenario:
+    # recurring conjunction / maneuver keep-outs: every 3 h the station
+    # drops for 25 min, masking every window rising inside the blackout
+    return Scenario(name="conjunction-outage", walker=Walker(),
+                    stations=(KIRUNA,),
+                    channel=ChannelModel(
+                        blackout=ConjunctionBlackout(period=3 * 3600.0,
+                                                     duration=1500.0)))
+
+
+@register("mega-1000-lossy")
+def _mega_1000_lossy() -> Scenario:
+    # scale + loss combined: the mega-1000 regime over the flat 10 %
+    # erasure channel (bench_lossy_round's headline scenario)
+    return Scenario(name="mega-1000-lossy",
+                    walker=Walker(n_sats=1000, n_planes=20),
+                    stations=(KIRUNA, SVALBARD, INUVIK),
+                    k_direct=8, n_relay=4, max_hops=6,
+                    channel=ChannelModel(
+                        loss=0.10,
+                        arq=SelectiveRepeatARQ(seg_bytes=1024, max_rounds=4)))

@@ -14,6 +14,7 @@ import pytest
 KERNEL_MODULES = {
     "test_kernels",
     "test_compress_pipeline",
+    "test_erasure_kernel",
     "test_attention_backends",
     "test_ssm_oracles",
 }
@@ -23,6 +24,7 @@ SIMWIRE_MODULES = {
     "test_constellation",
     "test_wire_codecs",
     "test_bench_harness",
+    "test_channel",
 }
 
 

@@ -1,0 +1,418 @@
+"""Lossy-channel subsystem: link budget, outages, ARQ, engine wiring, and
+the loss-robust error-feedback path through SpaceRunner.
+
+The load-bearing regression here is loss=0 exactness: a default
+``ChannelModel()`` must reproduce the lossless simulator's ``Delivery``
+byte/time accounting bit-for-bit (acceptance criterion of the channel
+subsystem)."""
+import dataclasses
+
+import numpy as np
+import pytest
+
+jax = pytest.importorskip("jax")
+import jax.numpy as jnp  # noqa: E402
+
+from repro.channel import (ChannelModel, ConjunctionBlackout, LinkBudget,
+                           RainFade, SelectiveRepeatARQ, counter_uniform,
+                           counter_uniforms, slant_range)  # noqa: E402
+from repro.constellation.links import LinkModel, message_bytes  # noqa: E402
+from repro.constellation.orbits import GroundStation, Walker  # noqa: E402
+from repro.sim import Engine, Scenario, get_scenario  # noqa: E402
+
+MSG = message_bytes(10000, 10.0)
+W, GS = Walker(), GroundStation()
+
+
+def _tx(ch, nbytes=MSG, t0=0.0, wend=1e9, sat=0, seed=0, win=5):
+    return ch.transmit(LinkModel(), nbytes, walker=W, station_obj=GS,
+                       gateway=sat, sat=sat, t_start=t0, window_end=wend,
+                       seed=seed, station=0, window_id=win)
+
+
+# ---------------------------------------------------------------------------
+# link budget
+# ---------------------------------------------------------------------------
+
+def test_link_budget_monotone_in_elevation():
+    lb = LinkBudget()
+    els = [10.0, 25.0, 45.0, 70.0, 90.0]
+    slants = [slant_range(e, lb.altitude) for e in els]
+    snrs = [lb.snr_db(e) for e in els]
+    ps = [lb.p_seg(e, 1024) for e in els]
+    rates = [lb.rate(e) for e in els]
+    assert slants == sorted(slants, reverse=True)
+    assert snrs == sorted(snrs)
+    assert ps == sorted(ps, reverse=True)
+    assert rates == sorted(rates)
+    assert 0.0 <= min(ps) and max(ps) <= 1.0
+
+
+def test_fade_degrades_the_link():
+    lb = LinkBudget()
+    assert lb.snr_db(45.0, fade_db=6.0) == pytest.approx(lb.snr_db(45.0) - 6.0)
+    assert lb.p_seg(45.0, 1024, fade_db=12.0) >= lb.p_seg(45.0, 1024)
+    assert lb.rate(45.0, fade_db=12.0) <= lb.rate(45.0)
+
+
+def test_slant_range_geometry_limits():
+    # zenith pass = altitude; horizon pass = much longer
+    assert slant_range(90.0, 550e3) == pytest.approx(550e3)
+    assert slant_range(0.0, 550e3) > 2000e3
+
+
+def test_single_sat_propagation_matches_walker():
+    """elevation_at's one-orbit propagation must agree with the full
+    constellation sweep (it exists so budget-channel scheduling is O(1)
+    per query, not O(n_sats))."""
+    from repro.channel.budget import elevation_at, sat_position
+    from repro.constellation.orbits import elevation
+    rng = np.random.default_rng(0)
+    for _ in range(20):
+        s = int(rng.integers(0, W.n_sats))
+        t = float(rng.uniform(0.0, 86400.0))
+        np.testing.assert_allclose(sat_position(W, s, t),
+                                   W.positions(np.asarray(t))[s],
+                                   rtol=1e-12)
+        el_full = float(elevation(W.positions(np.asarray(t)),
+                                  GS.position(np.asarray(t)))[s])
+        assert elevation_at(W, GS, s, t) == pytest.approx(el_full,
+                                                          abs=1e-9)
+
+
+# ---------------------------------------------------------------------------
+# counter RNG + outage processes
+# ---------------------------------------------------------------------------
+
+def test_counter_uniforms_deterministic_and_vectorized():
+    u1 = counter_uniform(42, 1, 2, 3)
+    u2 = counter_uniform(42, 1, 2, 3)
+    assert u1 == u2 and 0.0 <= u1 < 1.0
+    assert counter_uniform(43, 1, 2, 3) != u1
+    segs = np.arange(100)
+    vec = counter_uniforms(42, 7, segs)
+    assert vec.shape == (100,)
+    assert vec[13] == counter_uniform(42, 7, 13)
+    # decent uniformity even over sequential counters
+    assert 0.3 < vec.mean() < 0.7
+
+
+def test_rain_fade_deterministic_and_gated_by_p_fade():
+    rf = RainFade(p_fade=0.5, mean_db=6.0)
+    fades = [rf.fade_db(0, 0, s, 3) for s in range(200)]
+    assert fades == [rf.fade_db(0, 0, s, 3) for s in range(200)]
+    n_clear = sum(f == 0.0 for f in fades)
+    assert 60 < n_clear < 140          # ~ p_fade = 0.5
+    assert all(f >= 0.0 for f in fades)
+    assert RainFade(p_fade=0.0).fade_db(0, 0, 1, 2) == 0.0
+
+
+def test_conjunction_blackout_periodic():
+    bo = ConjunctionBlackout(period=100.0, duration=10.0, station_phase=0.0)
+    assert bo.blacked_out(0, 5.0)
+    assert not bo.blacked_out(0, 15.0)
+    assert bo.blacked_out(0, 105.0)
+    assert bo.next_clear(0, 5.0) == pytest.approx(10.0)
+    assert bo.next_clear(0, 15.0) == pytest.approx(15.0)
+    # station phase shifts the window
+    bo2 = ConjunctionBlackout(period=100.0, duration=10.0,
+                              station_phase=50.0)
+    assert bo2.blacked_out(1, 55.0) and not bo2.blacked_out(0, 55.0)
+
+
+# ---------------------------------------------------------------------------
+# selective-repeat ARQ
+# ---------------------------------------------------------------------------
+
+def test_arq_lossless_time_identity():
+    """loss=0 → exactly LinkModel.gs_time, same float expression."""
+    r = _tx(ChannelModel(), t0=100.0)
+    assert r.t_done == 100.0 + LinkModel().gs_time(MSG)
+    assert r.delivered and r.retries == 0
+    assert r.nbytes == MSG and r.nbytes_attempted == MSG
+
+
+def test_arq_retransmissions_cost_time_and_bytes():
+    ch = ChannelModel(loss=0.3, arq=SelectiveRepeatARQ(max_rounds=6))
+    r = _tx(ch)
+    r0 = _tx(ChannelModel())
+    assert r.delivered
+    assert r.retries > 0
+    assert r.nbytes_attempted > MSG
+    assert r.t_done > r0.t_done
+    # deterministic: same counters → same outcome
+    assert _tx(ch) == r
+    # different window id → different erasure pattern eventually
+    assert any(_tx(ch, win=w) != r for w in range(1, 12))
+
+
+def test_arq_truncates_mid_window():
+    ch = ChannelModel(loss=0.3)
+    big = 5e6                                  # 0.42 s on the 100 Mbit link
+    r = _tx(ch, nbytes=big, wend=0.2)
+    assert not r.delivered
+    assert r.nbytes == 0.0
+    assert r.t_done == pytest.approx(0.2)      # link held to window end
+    assert 0.0 < r.nbytes_attempted < big
+
+
+def test_arq_gives_up_after_max_rounds():
+    ch = ChannelModel(loss=1.0, arq=SelectiveRepeatARQ(max_rounds=3))
+    r = _tx(ch)
+    assert not r.delivered
+    assert r.retries == 2                  # 3 rounds = initial + 2 retx
+    assert r.nbytes_attempted == pytest.approx(3 * MSG)
+
+
+def test_arq_segment_sizes_cover_message():
+    arq = SelectiveRepeatARQ(seg_bytes=1024)
+    sizes = arq.segment_sizes(2500.0)
+    assert sum(sizes) == pytest.approx(2500.0)
+    assert sizes[:2] == [1024.0, 1024.0] and sizes[2] == pytest.approx(452.0)
+    assert arq.segment_sizes(10.0) == [10.0]
+
+
+# ---------------------------------------------------------------------------
+# engine wiring — THE loss=0 exactness regression + lossy behaviour
+# ---------------------------------------------------------------------------
+
+def test_engine_lossless_channel_reproduces_accounting_exactly():
+    """Acceptance: with loss=0 the channel path reproduces today's
+    Delivery byte/time accounting exactly — sync and async."""
+    sc = get_scenario("walker-kiruna")
+    sc0 = dataclasses.replace(sc, channel=ChannelModel())
+    e_plain, e_chan = Engine(sc), Engine(sc0)
+    t = 0.0
+    for _ in range(3):
+        r1, r2 = e_plain.run_round(t, MSG), e_chan.run_round(t, MSG)
+        assert np.array_equal(r1.mask, r2.mask)
+        assert r1.duration == r2.duration
+        assert len(r1.deliveries) == len(r2.deliveries)
+        for a, b in zip(r1.deliveries, r2.deliveries):
+            assert (a.sat, a.t_done, a.nbytes, a.station, a.window,
+                    a.gateway, a.hops) == \
+                   (b.sat, b.t_done, b.nbytes, b.station, b.window,
+                    b.gateway, b.hops)
+            assert b.delivered and b.retries == 0
+            assert b.nbytes_attempted == a.nbytes
+        t += r1.duration
+    d1 = Engine(sc).run_async(0.0, MSG, n_deliveries=40)
+    d2 = Engine(sc0).run_async(0.0, MSG, n_deliveries=40)
+    assert [(d.sat, d.t_done) for d in d1] == [(d.sat, d.t_done) for d in d2]
+
+
+def test_engine_lossy_round_masks_only_delivered():
+    sc = dataclasses.replace(
+        get_scenario("walker-kiruna"),
+        channel=ChannelModel(loss=0.4, arq=SelectiveRepeatARQ(max_rounds=2)))
+    res = Engine(sc).run_round(0.0, MSG)
+    ok = [d for d in res.deliveries if d.delivered]
+    lost = [d for d in res.deliveries if not d.delivered]
+    assert lost, "expected channel losses at p=0.4 / 2 rounds"
+    assert res.mask.sum() == len(ok)
+    for d in res.deliveries:
+        assert d.nbytes_attempted >= d.nbytes
+        if not d.delivered:
+            assert d.nbytes == 0.0
+    # scheduled-but-lost satellites are not in the mask
+    assert all(not res.mask[d.sat] for d in lost)
+    # deterministic rebuild
+    res2 = Engine(sc).run_round(0.0, MSG)
+    assert [(d.sat, d.t_done, d.delivered) for d in res.deliveries] == \
+           [(d.sat, d.t_done, d.delivered) for d in res2.deliveries]
+
+
+def test_engine_lossy_async_counts_only_successes():
+    sc = dataclasses.replace(
+        get_scenario("walker-kiruna"),
+        channel=ChannelModel(loss=0.4, arq=SelectiveRepeatARQ(max_rounds=2)))
+    recs = Engine(sc).run_async(0.0, MSG, n_deliveries=30)
+    ok = [d for d in recs if d.delivered]
+    assert len(ok) == 30
+    assert len(recs) > 30              # failures interleaved in the record
+    ts = [d.t_done for d in recs]
+    assert ts == sorted(ts)
+
+
+def test_blackout_masks_windows_and_survives_extension():
+    sc = dataclasses.replace(
+        get_scenario("walker-kiruna"),
+        channel=ChannelModel(blackout=ConjunctionBlackout(period=3600.0,
+                                                          duration=600.0)))
+    eng = Engine(sc)
+    blocked = eng._blocked[0]
+    assert blocked is not None and blocked.any()
+    before = blocked.copy()
+    rises_before = eng.plan.rises[0].copy()
+    eng.ensure(4 * eng.plan.horizon)
+    w = min(before.shape[1], eng._blocked[0].shape[1])
+    keep = (np.isfinite(rises_before[:, :w])
+            & np.isfinite(eng.plan.rises[0][:, :w]))
+    np.testing.assert_array_equal(before[:, :w][keep],
+                                  eng._blocked[0][:, :w][keep])
+
+
+@pytest.mark.parametrize("name", ["lossy-uplink", "rain-fade",
+                                  "ka-band-degraded", "conjunction-outage"])
+def test_channel_scenarios_run_and_deliver(name):
+    eng = Engine(get_scenario(name), seed=1)
+    t, ok = 0.0, 0
+    for _ in range(4):
+        r = eng.run_round(t, MSG)
+        t += r.duration
+        ok += int(r.mask.sum())
+    assert ok >= 1, f"{name} delivered nothing in 4 rounds"
+
+
+def test_mega_1000_lossy_registered():
+    sc = get_scenario("mega-1000-lossy")
+    assert sc.walker.n_sats == 1000 and sc.channel is not None
+
+
+# ---------------------------------------------------------------------------
+# SpaceRunner: loss-robust EF
+# ---------------------------------------------------------------------------
+
+def _problem(n_agents=20, dim=30):
+    from repro.data.logistic import generate, make_local_loss, solve_global
+    data, _ = generate(jax.random.PRNGKey(0), n_agents=n_agents, m=60,
+                       dim=dim)
+    loss = make_local_loss(eps=50.0, n_agents=n_agents)
+    return data, loss, solve_global(data, eps=50.0)
+
+
+def _fedlt(loss, ef=True):
+    from repro.core.compression import UniformQuantizer
+    from repro.core.error_feedback import EFChannel
+    from repro.core.fedlt import FedLT
+    C = UniformQuantizer(levels=10, vmin=-1, vmax=1, clip=True)
+    return FedLT(loss=loss, n_epochs=3, gamma=0.005, rho=20.0,
+                 uplink=EFChannel(C, enabled=ef),
+                 downlink=EFChannel(C, enabled=ef)), C
+
+
+def test_revert_lost_wires_semantics():
+    """Lost agents: coordinator wire AND uplink cache revert; delivered
+    agents keep the round's values; x/z always advance."""
+    from repro.core.fedlt_sat import _revert_lost_wires
+
+    data, loss, _ = _problem()
+    alg, _C = _fedlt(loss)
+    st0 = alg.init(jnp.zeros((30,)), 20)
+    active = jnp.ones((20,), bool)
+    st1, _ = alg.round(st0, data, active, jax.random.PRNGKey(1))
+    lost = np.zeros(20, bool)
+    lost[[3, 7]] = True
+    fixed = _revert_lost_wires(st1, st0, "z_hat", jnp.asarray(lost),
+                               absorb=True)
+    for leaf_new, leaf_old, leaf_fix in zip(
+            jax.tree_util.tree_leaves(st1.z_hat),
+            jax.tree_util.tree_leaves(st0.z_hat),
+            jax.tree_util.tree_leaves(fixed.z_hat)):
+        np.testing.assert_array_equal(leaf_fix[lost], leaf_old[lost])
+        np.testing.assert_array_equal(leaf_fix[~lost], leaf_new[~lost])
+    for leaf_new, leaf_old, leaf_fix in zip(
+            jax.tree_util.tree_leaves(st1.c_up),
+            jax.tree_util.tree_leaves(st0.c_up),
+            jax.tree_util.tree_leaves(fixed.c_up)):
+        np.testing.assert_array_equal(leaf_fix[lost], leaf_old[lost])
+        np.testing.assert_array_equal(leaf_fix[~lost], leaf_new[~lost])
+    # x advances for everyone (the satellite did train)
+    for leaf_new, leaf_fix in zip(jax.tree_util.tree_leaves(st1.x),
+                                  jax.tree_util.tree_leaves(fixed.x)):
+        np.testing.assert_array_equal(leaf_fix, leaf_new)
+
+
+def test_space_runner_lossless_channel_logs_match_plain():
+    from repro.core.fedlt_sat import SpaceRunner
+
+    data, loss, _ = _problem()
+    sc = Scenario(name="small", walker=Walker(n_sats=20, n_planes=4),
+                  stations=(GroundStation(),), k_direct=3, n_relay=2)
+    alg, C = _fedlt(loss)
+    st0 = alg.init(jnp.zeros((30,)), 20)
+    _, logs_plain = SpaceRunner(Engine(sc), compressor=C).run(
+        alg, st0, data, 4, jax.random.PRNGKey(2))
+    _, logs_chan = SpaceRunner(Engine(sc), compressor=C,
+                               channel=ChannelModel()).run(
+        alg, st0, data, 4, jax.random.PRNGKey(2))
+    assert [(l.time, l.bytes_up, l.n_active) for l in logs_plain] == \
+           [(l.time, l.bytes_up, l.n_active) for l in logs_chan]
+    assert all(l.n_lost == 0 for l in logs_chan)
+
+
+def test_space_runner_lossy_accounts_losses_and_air_bytes():
+    from repro.core.fedlt_sat import SpaceRunner
+
+    data, loss, _ = _problem()
+    sc = Scenario(name="small", walker=Walker(n_sats=20, n_planes=4),
+                  stations=(GroundStation(),), k_direct=3, n_relay=2)
+    alg, C = _fedlt(loss)
+    st0 = alg.init(jnp.zeros((30,)), 20)
+    ch = ChannelModel(loss=0.25, arq=SelectiveRepeatARQ(seg_bytes=16,
+                                                        max_rounds=2))
+    _, logs = SpaceRunner(Engine(sc), compressor=C, channel=ch).run(
+        alg, st0, data, 8, jax.random.PRNGKey(2))
+    assert sum(l.n_lost for l in logs) > 0
+    _, logs0 = SpaceRunner(Engine(sc), compressor=C,
+                           channel=ChannelModel()).run(
+        alg, st0, data, 8, jax.random.PRNGKey(2))
+    # retransmissions make air bytes strictly exceed the lossless ledger
+    assert logs[-1].bytes_up > logs0[-1].bytes_up
+
+
+def test_cohort_measure_accounts_transmitted_wire_for_lost_sats():
+    """Sparse-codec cohort accounting must measure the PRE-revert wire (what
+    actually went on the air), not the reverted coordinator state — at
+    loss=1 every attempt is lost, yet each transmitted TopK payload still
+    carries k values, far above the header-only size of the all-zeros
+    init wire the revert restores."""
+    from repro.core.compression import TopK
+    from repro.core.error_feedback import EFChannel
+    from repro.core.fedlt import FedLT
+    from repro.core.fedlt_sat import SpaceRunner
+
+    data, loss, _ = _problem(n_agents=20, dim=30)
+    C = TopK(fraction=0.25)
+    alg = FedLT(loss=loss, n_epochs=2, gamma=0.005, rho=20.0,
+                uplink=EFChannel(C), downlink=EFChannel(C))
+    st0 = alg.init(jnp.zeros((30,)), 20)
+    sc = Scenario(name="small", walker=Walker(n_sats=20, n_planes=4),
+                  stations=(GroundStation(),), k_direct=3, n_relay=2)
+    ch = ChannelModel(loss=1.0, arq=SelectiveRepeatARQ(seg_bytes=1 << 20,
+                                                       max_rounds=1))
+    _, logs = SpaceRunner(Engine(sc), compressor=C, measure="cohort",
+                          channel=ch).run(alg, st0, data, 2,
+                                          jax.random.PRNGKey(2))
+    n_attempts = sum(l.n_lost + l.n_active for l in logs)
+    assert n_attempts > 0 and all(l.n_active == 0 for l in logs)
+    # ~8 of 30 coords kept → ≥ 8·4 payload bytes per attempt, well above
+    # the ~30-byte header-only floor of an empty sparse message
+    assert logs[-1].bytes_up / n_attempts > 50.0
+
+
+def test_loss_robust_ef_dominates_no_ef_on_walker_kiruna():
+    """Acceptance claim (test-scale): at >= 10% segment loss on
+    walker-kiruna, loss-robust EF beats no-EF optimality error.  The
+    benchmark (`benchmarks/table_lossy_ef.py`) runs the full sweep."""
+    from repro.core.fedlt import optimality_error
+    from repro.core.fedlt_sat import SpaceRunner
+
+    n_agents, dim = 100, 40
+    from repro.data.logistic import generate, make_local_loss, solve_global
+    data, _ = generate(jax.random.PRNGKey(0), n_agents=n_agents, m=40,
+                       dim=dim)
+    loss = make_local_loss(eps=50.0, n_agents=n_agents)
+    x_star = solve_global(data, eps=50.0)
+    ch = ChannelModel(loss=0.15, arq=SelectiveRepeatARQ(seg_bytes=4096,
+                                                        max_rounds=1))
+    errs = {}
+    for ef in (True, False):
+        alg, C = _fedlt(loss, ef=ef)
+        st = alg.init(jnp.zeros((dim,)), n_agents)
+        runner = SpaceRunner(Engine(get_scenario("walker-kiruna")),
+                             compressor=C, channel=ch, loss_robust=ef)
+        st, logs = runner.run(alg, st, data, 200, jax.random.PRNGKey(2))
+        errs[ef] = float(optimality_error(st.x, x_star))
+        assert sum(l.n_lost for l in logs) > 0
+    assert errs[True] < errs[False], errs

@@ -323,6 +323,57 @@ def test_space_runner_cohort_measure_matches_probe():
         [l.bytes_up for l in logs_probe]
 
 
+def test_group_cohorts_property():
+    """Hypothesis property: cohorts exactly partition the delivery list;
+    cohort keys (station, window) are disjoint; cohorts are time-ordered
+    by first delivery; NaN-window deliveries stay singletons."""
+    hyp = pytest.importorskip("hypothesis")
+    from hypothesis import strategies as st
+
+    from repro.sim import Delivery, group_cohorts
+
+    window_vals = st.one_of(
+        st.sampled_from([0.0, 600.0, 1200.0, float("nan")]))
+    delivery = st.tuples(st.integers(0, 30), st.integers(0, 2),
+                         window_vals, st.floats(0.0, 1e4))
+
+    @hyp.given(st.lists(delivery, max_size=40))
+    @hyp.settings(deadline=None, max_examples=200)
+    def check(raw):
+        # deliveries arrive in t_done order, as the engine produces them
+        raw = sorted(raw, key=lambda r: r[3])
+        ds = [Delivery(sat=s, t_done=t, t_start=0.0, gateway=s, station=g,
+                       hops=0, nbytes=1.0, window=w)
+              for (s, g, w, t) in raw]
+        cohorts = group_cohorts(ds)
+        # exact partition: every delivery in exactly one cohort, order kept
+        flat = [d for c in cohorts for d in c.deliveries]
+        assert sorted(map(id, flat)) == sorted(map(id, ds))
+        for c in cohorts:
+            assert c.sats == [d.sat for d in c.deliveries]
+            ts = [d.t_done for d in c.deliveries]
+            assert ts == sorted(ts)
+            for d in c.deliveries:
+                assert d.station == c.station
+                if d.window == d.window:
+                    assert d.window == c.window
+        # disjoint windows: no two cohorts share a (station, window) key
+        keys = [(c.station, c.window) for c in cohorts
+                if c.window == c.window]
+        assert len(keys) == len(set(keys))
+        # NaN-window deliveries each form their own singleton cohort
+        n_nan = sum(1 for d in ds if d.window != d.window)
+        assert sum(1 for c in cohorts
+                   if c.window != c.window) == n_nan
+        assert all(len(c.deliveries) == 1 for c in cohorts
+                   if c.window != c.window)
+        # time-ordered by first delivery
+        firsts = [c.t_first for c in cohorts]
+        assert firsts == sorted(firsts)
+
+    check()
+
+
 def test_space_runner_rejects_bad_measure():
     sc = Scenario(walker=Walker(n_sats=4, n_planes=2),
                   stations=(GroundStation(),))
