@@ -1,0 +1,107 @@
+"""Profile one mega-constellation engine round — evidence for perf PRs.
+
+Every simulator perf change so far started from a cProfile dump showing
+where a mega round actually spends its time (PR 5's was unambiguous:
+~100 % contact-plan rebuild, ~0 % event loop).  This script makes that
+evidence a one-liner and a CI artifact, so the next optimization doesn't
+start from guesswork:
+
+    PYTHONPATH=src python benchmarks/profile_round.py                  \
+        [--scenario mega-1000] [--rounds 3] [--seed 0]                 \
+        [--out profile_round.txt] [--oracle] [--check-equivalence]
+
+* profiles ``Engine.run_round`` over ``--rounds`` rounds (engine
+  construction — the one-off cold contact-plan build — stays outside the
+  profiler, matching how ``bench_scale`` accounts it);
+* prints the top-25 cumulative entries and, with ``--out``, writes the
+  same table plus a raw pstats dump (``<out>.pstats``) for snakeviz /
+  ``pstats.Stats`` spelunking — the CI perf-gate job uploads both;
+* ``--check-equivalence`` first replays the trajectory on the heapq
+  oracle (``Engine(fast=False)``) and asserts the fast path's Delivery
+  records match field-for-field — the fast-vs-oracle smoke CI runs on
+  every push (exits non-zero on divergence).
+"""
+from __future__ import annotations
+
+import argparse
+import cProfile
+import io
+import pstats
+import sys
+
+from repro.constellation.links import message_bytes
+from repro.sim import Engine, get_scenario
+
+MSG = message_bytes(10000, 10.0)
+
+
+def check_equivalence(scenario: str, rounds: int, seed: int,
+                      async_deliveries: int = 100) -> None:
+    """Assert fast == oracle Delivery timelines, sync and async (the
+    shared ``assert_fast_oracle_equivalent`` contract — one definition
+    for this CI smoke and ``sim_scale.bench_fast_round``)."""
+    try:                  # package mode (-m / registry)
+        from benchmarks.common import assert_fast_oracle_equivalent
+    except ImportError:   # script mode: benchmarks/ itself is sys.path[0]
+        from common import assert_fast_oracle_equivalent
+    eng_f = Engine(get_scenario(scenario), seed=seed, fast=True)
+    eng_o = Engine(get_scenario(scenario), seed=seed, fast=False)
+    assert_fast_oracle_equivalent(eng_f, eng_o, MSG, rounds=rounds,
+                                  async_deliveries=async_deliveries)
+    print(f"equivalence OK: fast == oracle on {scenario!r} "
+          f"({rounds} sync rounds + {async_deliveries} async successes, "
+          f"seed {seed})")
+
+
+def profile_rounds(scenario: str, rounds: int, seed: int,
+                   fast: bool = True) -> pstats.Stats:
+    eng = Engine(get_scenario(scenario), seed=seed, fast=fast)
+    prof = cProfile.Profile()
+    prof.enable()
+    t = 0.0
+    for _ in range(rounds):
+        t += eng.run_round(t, MSG).duration
+    prof.disable()
+    return pstats.Stats(prof)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--scenario", default="mega-1000",
+                    help="registered scenario name (default mega-1000)")
+    ap.add_argument("--rounds", type=int, default=3)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--out", default=None,
+                    help="write the top-25 table to FILE and raw pstats "
+                         "data to FILE.pstats")
+    ap.add_argument("--oracle", action="store_true",
+                    help="profile the heapq oracle instead of the fast "
+                         "path (before/after comparisons)")
+    ap.add_argument("--check-equivalence", action="store_true",
+                    help="assert fast == oracle Delivery timelines before "
+                         "profiling (CI smoke)")
+    args = ap.parse_args(argv)
+
+    if args.check_equivalence:
+        check_equivalence(args.scenario, args.rounds, args.seed)
+
+    stats = profile_rounds(args.scenario, args.rounds, args.seed,
+                           fast=not args.oracle)
+    buf = io.StringIO()
+    stats.stream = buf
+    stats.sort_stats("cumulative").print_stats(25)
+    table = buf.getvalue()
+    print(table)
+    if args.out:
+        with open(args.out, "w") as f:
+            f.write(f"# profile_round --scenario {args.scenario} "
+                    f"--rounds {args.rounds} --seed {args.seed}"
+                    f"{' --oracle' if args.oracle else ''}\n")
+            f.write(table)
+        stats.dump_stats(args.out + ".pstats")
+        print(f"wrote {args.out} and {args.out}.pstats")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -204,6 +204,41 @@ def _sim_lossy_round(tiny: bool) -> Dict[str, dict]:
 
 
 @register_benchmark(
+    "sim.fast_round", "sim",
+    "vectorized batch-event core vs the heapq oracle: Delivery-timeline "
+    "equivalence asserted bit-for-bit, then warm sync/async wall-clock "
+    "ratios on mega-1000")
+def _sim_fast_round(tiny: bool) -> Dict[str, dict]:
+    from benchmarks.sim_scale import bench_fast_round
+    # mega-1000 runs even in the tiny CI set: the async fast-vs-oracle
+    # ratio is this PR's gated claim, and as a same-machine ratio of two
+    # pure-python/numpy paths it is stable across hosts.  The sync ratio
+    # hovers near 1.1x (the warm sync loop was never the bottleneck —
+    # plan extension and the channel stack were), so it stays
+    # informational.
+    r = bench_fast_round(1000, rounds=3)
+    # the raw async ratio is large but volatile (~20-30x run to run —
+    # the oracle side is GC/alloc-noise heavy), so the GATED metric caps
+    # it at 10x: any healthy run saturates the cap and compares 1.0
+    # against the baseline, while a real regression (the batched
+    # dispatcher degrading toward per-event routing) lands far below
+    # 10·(1−tol) and still fails the gate.  The raw ratio rides along.
+    return {
+        "n1000_round_s_fast": metric(r["round_s_fast"], "s/round",
+                                     higher_is_better=False),
+        "n1000_round_s_oracle": metric(r["round_s_oracle"], "s/round",
+                                       higher_is_better=False),
+        "n1000_sync_speedup": metric(r["sync_speedup"], "x",
+                                     higher_is_better=True),
+        "n1000_async_speedup": metric(r["async_speedup"], "x",
+                                      higher_is_better=True),
+        "n1000_async_speedup_capped": metric(
+            min(r["async_speedup"], 10.0), "x", higher_is_better=True,
+            gate=True),
+    }
+
+
+@register_benchmark(
     "sim.engine_scale", "sim",
     "discrete-event engine throughput (cold plan build + sync rounds + "
     "async deliveries) at 100/1000/10000-satellite scale")

@@ -6,14 +6,14 @@ package says *how well*.  See :mod:`repro.channel.model` for the facade
 :mod:`repro.kernels.erasure_mask` for the device-side batch erasure
 kernel over packed wire words.
 """
-from .arq import SelectiveRepeatARQ, TxResult
+from .arq import ArqPlan, SelectiveRepeatARQ, TxResult
 from .budget import LinkBudget, elevation_at, fspl_db, slant_range
 from .model import ChannelModel
 from .outage import (ConjunctionBlackout, RainFade, counter_uniform,
                      counter_uniforms)
 
 __all__ = [
-    "ChannelModel", "LinkBudget", "SelectiveRepeatARQ", "TxResult",
+    "ArqPlan", "ChannelModel", "LinkBudget", "SelectiveRepeatARQ", "TxResult",
     "RainFade", "ConjunctionBlackout", "counter_uniform",
     "counter_uniforms", "elevation_at", "fspl_db", "slant_range",
 ]

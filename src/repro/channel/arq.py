@@ -48,6 +48,56 @@ class TxResult:
     p_seg: float                # erasure probability the attempt saw
 
 
+@dataclasses.dataclass
+class ArqPlan:
+    """Precomputed profile of one ARQ delivery over a TIME-INVARIANT link
+    (fixed rate and erasure probability, i.e. ``budget=None`` channels).
+
+    The erasure pattern of a delivery is a pure counter-hash of
+    (seed, station, sat, window) — independent of when the transmission
+    starts — so everything except window truncation can be computed once
+    and replayed: :meth:`replay` re-runs only the ``t``/truncation
+    arithmetic of :meth:`SelectiveRepeatARQ.transmit`, in the same float
+    operation order, and therefore reproduces its :class:`TxResult`
+    bit-for-bit for any ``(t_start, window_end)``.  Built by
+    :meth:`SelectiveRepeatARQ.plan` from ONE batched counter draw over
+    the whole (round, segment) grid instead of one draw per round.
+    """
+
+    rtt: float
+    latency: float
+    rate: float                 # bytes/s the truncation maths sees
+    nbytes: float
+    n_segments: int
+    p_last: float               # erasure probability every round saw
+    bursts: list                # per executed round: bytes put on the air
+    t_airs: list                # per executed round: air time of the burst
+    attempted_before: list      # attempted-bytes ledger entering each round
+    attempted_total: float
+    delivered: bool             # all segments landed within max_rounds
+
+    def replay(self, t_start: float, window_end: float) -> TxResult:
+        """Replay the planned delivery inside ``[t_start, window_end)``."""
+        t = float(t_start)
+        for k, t_air in enumerate(self.t_airs):
+            if k > 0:
+                t += self.rtt                      # wait for the NACK set
+            if t + t_air > window_end:
+                # truncated mid-window: count the bytes that made it out
+                on_air = max(0.0, (window_end - t - self.latency)) * self.rate
+                attempted = (self.attempted_before[k]
+                             + min(self.bursts[k], max(on_air, 0.0)))
+                return TxResult(float(window_end), False, 0.0, attempted,
+                                k, self.n_segments, self.p_last)
+            t += t_air
+        rounds = len(self.t_airs)
+        if not self.delivered:
+            return TxResult(t, False, 0.0, self.attempted_total, rounds - 1,
+                            self.n_segments, self.p_last)
+        return TxResult(t, True, float(self.nbytes), self.attempted_total,
+                        rounds - 1, self.n_segments, self.p_last)
+
+
 @dataclasses.dataclass(frozen=True)
 class SelectiveRepeatARQ:
     """Segmentation + retransmission policy (link-agnostic)."""
@@ -62,6 +112,55 @@ class SelectiveRepeatARQ:
         sizes = [float(self.seg_bytes)] * n_seg
         sizes[-1] = nbytes - self.seg_bytes * (n_seg - 1)
         return sizes
+
+    def plan(self, nbytes: float, *, rate: float, p_seg: float,
+             latency: float,
+             draw: Callable[[np.ndarray, np.ndarray], np.ndarray],
+             gs_time: Optional[Callable[[float], float]] = None) -> ArqPlan:
+        """Precompute a replayable :class:`ArqPlan` for a time-invariant
+        link (``rate``/``p_seg`` scalars, not callables).
+
+        Runs the same round loop as :meth:`transmit` — same burst sums in
+        the same order, same per-round air-time expressions, same
+        surviving-segment filtering — but samples the WHOLE
+        (round, segment) uniform grid in one batched ``draw`` call (the
+        counter hash is elementwise, so ``u[k, segs]`` equals what
+        ``transmit``'s per-round ``draw(k, segs)`` would have returned)
+        and records the per-round ledger :meth:`ArqPlan.replay` needs.
+        """
+        sizes = self.segment_sizes(nbytes)
+        n_seg = len(sizes)
+        if p_seg > 0.0:
+            u = draw(np.arange(self.max_rounds, dtype=np.int64)[:, None],
+                     np.arange(n_seg, dtype=np.int64)[None, :])
+        remaining = list(range(n_seg))
+        bursts: list = []
+        t_airs: list = []
+        attempted_before: list = []
+        attempted = 0.0
+        rounds = 0
+        while remaining and rounds < self.max_rounds:
+            burst = sum(sizes[i] for i in remaining)
+            if gs_time is not None and len(remaining) == n_seg:
+                t_air = gs_time(burst)             # exact fixed-rate path
+            else:
+                t_air = latency + burst / rate
+            bursts.append(burst)
+            t_airs.append(t_air)
+            attempted_before.append(attempted)
+            attempted += burst
+            rounds += 1
+            if p_seg > 0.0:
+                segs = np.asarray(remaining)
+                remaining = [int(i) for i in segs[u[rounds - 1, segs] < p_seg]]
+            else:
+                remaining = []
+        return ArqPlan(rtt=self.rtt, latency=latency, rate=rate,
+                       nbytes=nbytes, n_segments=n_seg,
+                       p_last=float(p_seg), bursts=bursts, t_airs=t_airs,
+                       attempted_before=attempted_before,
+                       attempted_total=attempted,
+                       delivered=not remaining)
 
     def transmit(self, nbytes: float, t_start: float, window_end: float,
                  *, rate: Callable[[float], float],

@@ -31,7 +31,7 @@ from typing import Optional
 
 from ..constellation.links import LinkModel
 from ..constellation.orbits import GroundStation, Walker
-from .arq import SelectiveRepeatARQ, TxResult
+from .arq import ArqPlan, SelectiveRepeatARQ, TxResult
 from .budget import LinkBudget, elevation_at
 from .outage import ConjunctionBlackout, RainFade, counter_uniforms
 
@@ -89,6 +89,42 @@ class ChannelModel:
         if p <= 0.0:
             return base
         return base / max(1.0 - min(p, 0.9), 0.1)
+
+    @property
+    def time_invariant(self) -> bool:
+        """True when rate/erasure probability don't depend on the
+        transmission instant — the fixed-rate (``budget=None``) stack.
+        Only then is a transmission replayable from an :class:`ArqPlan`."""
+        return self.budget is None
+
+    def arq_plan(self, link: LinkModel, nbytes: float, *, sat: int,
+                 seed: int, station: int, window_id: int) -> ArqPlan:
+        """Precomputed replayable delivery profile (fast-engine hot path).
+
+        Mirrors :meth:`transmit`'s fixed-rate branch argument-for-argument
+        — same constant rate/p/latency, same ``gs_time`` exact-path
+        condition, same counter mix — so
+        ``arq_plan(...).replay(t_start, window_end)`` returns the
+        identical :class:`TxResult` bit-for-bit.  Erasure counters depend
+        only on (seed, station, sat, window), so one plan serves every
+        retry of the same update through the same window and caches
+        across benchmark repetitions.  Raises on elevation-dependent
+        (``budget``) channels — those must transmit through the oracle
+        path.
+        """
+        if not self.time_invariant:
+            raise ValueError("arq_plan requires a time-invariant channel "
+                             "(budget=None); elevation-dependent budgets "
+                             "must use transmit()")
+        mix = (seed * 0x1F3F) ^ self.seed
+
+        def draw(rnd, segs):
+            return counter_uniforms(mix, station, sat, window_id, rnd, segs)
+
+        return self.arq.plan(
+            nbytes, rate=link.gs_rate, p_seg=float(self.loss),
+            latency=link.gs_latency, draw=draw,
+            gs_time=None if self.loss > 0.0 else link.gs_time)
 
     # -- transmission ------------------------------------------------------
     def transmit(self, link: LinkModel, nbytes: float, *,

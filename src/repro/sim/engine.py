@@ -154,16 +154,30 @@ class Engine:
     ``constellation.scheduler.Assignment``; defaults to the contact-plan
     :class:`~repro.constellation.scheduler.Scheduler` configured from the
     scenario.
+
+    ``fast=True`` (the default) routes :meth:`run_round` /
+    :meth:`run_async` through the vectorized batch-event core
+    (:mod:`repro.sim.fastpath`): structured numpy event arrays with
+    same-timestamp batch pops, batched route/window resolution, and a
+    cached/vectorized channel stack.  ``fast=False`` keeps the original
+    heapq state machine as the reference oracle; the two produce
+    bit-identical :class:`Delivery` timelines on any fixed seed (the
+    fast path's acceptance contract, enforced by
+    ``tests/test_fastpath_equivalence``).
     """
 
-    def __init__(self, scenario: Scenario, policy=None, seed: int = 0):
+    def __init__(self, scenario: Scenario, policy=None, seed: int = 0,
+                 fast: bool = True):
         self.scenario = scenario
         self.seed = seed
+        self.fast = bool(fast)
         self.channel = scenario.channel   # repro.channel.ChannelModel | None
         self.plan = ContactPlan(scenario.walker, scenario.stations,
                                 horizon=max(2 * scenario.lookahead, 7200.0),
                                 dt=scenario.dt)
         self.router = Router(scenario.walker, scenario.link)
+        self._chan_cache = None
+        self._fast = None
         self._blocked: Optional[list] = None
         self._refresh_blocked()
         if policy is None:
@@ -285,8 +299,32 @@ class Engine:
                                 nbytes_attempted=res.nbytes_attempted,
                                 retries=res.retries, delivered=res.delivered)
 
+    # -- fast-path plumbing ------------------------------------------------
+    @property
+    def chan_cache(self):
+        """Lazily-built :class:`repro.sim.fastpath.ChannelCache`."""
+        if self._chan_cache is None:
+            from .fastpath import ChannelCache    # lazy: no import cycle
+            self._chan_cache = ChannelCache(self)
+        return self._chan_cache
+
+    def _fast_state(self):
+        """Lazily-built fast-path topology/ISL caches."""
+        if self._fast is None:
+            from .fastpath import _FastState      # lazy: no import cycle
+            self._fast = _FastState(self)
+        return self._fast
+
     # -- synchronous mode --------------------------------------------------
     def run_round(self, t0: float, msg_bytes: float) -> RoundResult:
+        """One synchronous round (see the class docstring).  Dispatches
+        to the vectorized fast path unless ``fast=False``."""
+        if self.fast:
+            from .fastpath import run_round_fast
+            return run_round_fast(self, t0, msg_bytes)
+        return self._run_round_oracle(t0, msg_bytes)
+
+    def _run_round_oracle(self, t0: float, msg_bytes: float) -> RoundResult:
         sc = self.scenario
         self.ensure(t0 + 2 * sc.lookahead)
         asg = self.policy.assign(t0, msg_bytes, self)
@@ -394,7 +432,19 @@ class Engine:
         failed attempts (``delivered=False``) interleaved at their
         completion times — without one every record is a success, so the
         result is exactly the first ``n_deliveries`` deliveries.
+
+        Dispatches to the vectorized fast path unless ``fast=False``.
         """
+        if self.fast:
+            from .fastpath import run_async_fast
+            return run_async_fast(self, t0, msg_bytes, n_deliveries,
+                                  max_time=max_time)
+        return self._run_async_oracle(t0, msg_bytes, n_deliveries,
+                                      max_time=max_time)
+
+    def _run_async_oracle(self, t0: float, msg_bytes: float,
+                          n_deliveries: int,
+                          max_time: Optional[float] = None) -> List[Delivery]:
         sc = self.scenario
         n = sc.walker.n_sats
         gs_tx = sc.link.gs_time(msg_bytes)
@@ -446,9 +496,17 @@ class Engine:
             return best
 
         def park(st, t):
-            """No usable window for this gateway: re-route the backlog."""
-            for _, parked, _h in st["queue"]:
-                push(min(t + sc.lookahead, horizon_cap), "retry", sat=parked)
+            """No usable window for this gateway: re-route the backlog.
+
+            Retries only schedule strictly before the horizon cap — a
+            retry AT the cap can land back here (dispatch → self-route →
+            window never fits → park) and would re-push at the same
+            saturated time forever instead of letting the run drain.
+            """
+            if t < horizon_cap:
+                for _, parked, _h in st["queue"]:
+                    push(min(t + sc.lookahead, horizon_cap), "retry",
+                         sat=parked)
             st["queue"].clear()
             st["win"] = None
 

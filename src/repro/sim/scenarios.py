@@ -31,8 +31,9 @@ comparison needs:
                         high passes clean
     conjunction-outage  walker-kiruna with recurring conjunction
                         blackouts masking whole contact windows
-    mega-1000-lossy     mega-1000 over the flat 10 % erasure channel —
-                        scale + loss combined
+    mega-1000-lossy     mega-1000 over a flat 25 % erasure channel with
+                        3 ARQ rounds — scale + loss combined, with a real
+                        (~14 %) lost-delivery fraction
 
 Usage::
 
@@ -175,12 +176,17 @@ def _conjunction_outage() -> Scenario:
 
 @register("mega-1000-lossy")
 def _mega_1000_lossy() -> Scenario:
-    # scale + loss combined: the mega-1000 regime over the flat 10 %
-    # erasure channel (bench_lossy_round's headline scenario)
+    # scale + loss combined: the mega-1000 regime over a flat 25 %
+    # erasure channel with 3 ARQ rounds (bench_lossy_round's headline
+    # scenario).  The original 10 %/4-round setting had a per-delivery
+    # loss probability of ~1e-3 — the bench's lost_frac sat at exactly
+    # 0.0, so the loss-revert path was never exercised at scale; at
+    # 25 %/3 rounds roughly one delivery in seven is lost (asserted >0
+    # in the bench) while most of the fleet still lands.
     return Scenario(name="mega-1000-lossy",
                     walker=Walker(n_sats=1000, n_planes=20),
                     stations=(KIRUNA, SVALBARD, INUVIK),
                     k_direct=8, n_relay=4, max_hops=6,
                     channel=ChannelModel(
-                        loss=0.10,
-                        arq=SelectiveRepeatARQ(seg_bytes=1024, max_rounds=4)))
+                        loss=0.25,
+                        arq=SelectiveRepeatARQ(seg_bytes=1024, max_rounds=3)))

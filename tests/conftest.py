@@ -21,6 +21,7 @@ KERNEL_MODULES = {
 SIMWIRE_MODULES = {
     "test_sim_contacts",
     "test_sim_engine",
+    "test_fastpath_equivalence",
     "test_constellation",
     "test_wire_codecs",
     "test_bench_harness",

@@ -1,0 +1,220 @@
+"""Fast batch-event core vs the heapq oracle: bit-for-bit equivalence.
+
+The fast path's acceptance contract (ISSUE 5): for any scenario and
+fixed seed, ``Engine(fast=True)`` must reproduce ``Engine(fast=False)``'s
+``Delivery`` timeline — every field of every record, in order, bit for
+bit — across sync and async modes, lossless and every lossy channel.
+Equivalence is the test; speed is the feature (``bench_fast_round``).
+
+Also covered here: the supporting layers the fast path leans on keep
+their own exactness contracts — the fused visibility grid vs the
+reference elevation threshold, incremental contact-plan extension vs a
+from-scratch rebuild, replayable ARQ plans vs the windowed transmit
+state machine, and the translation-symmetric BFS neighborhoods vs the
+oracle's literal per-satellite search.
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.channel import ChannelModel, LinkBudget, SelectiveRepeatARQ
+from repro.constellation.links import LinkModel, message_bytes
+from repro.constellation.orbits import (GroundStation, Walker, visible,
+                                        visibility_grid)
+from repro.sim import ContactPlan, Engine, Scenario, get_scenario
+
+MSG = message_bytes(10000, 10.0)
+
+SYNC_SCENARIOS = ["walker-kiruna", "dual-station", "weather-dropout",
+                  "hetero-compute", "lossy-uplink", "rain-fade",
+                  "ka-band-degraded", "conjunction-outage"]
+ASYNC_SCENARIOS = ["walker-kiruna", "lossy-uplink", "rain-fade",
+                   "conjunction-outage"]
+
+
+# Delivery is an eq dataclass: == compares every field, including any a
+# future PR adds.  Engine-produced records always carry finite windows
+# (asserted in test_sim_engine), so NaN can't defeat the comparison.
+
+
+@pytest.mark.parametrize("name", SYNC_SCENARIOS)
+def test_sync_rounds_bit_for_bit(name):
+    eng_f = Engine(get_scenario(name), seed=1, fast=True)
+    eng_o = Engine(get_scenario(name), seed=1, fast=False)
+    t_f = t_o = 0.0
+    for r in range(3):
+        rf, ro = eng_f.run_round(t_f, MSG), eng_o.run_round(t_o, MSG)
+        assert rf.deliveries == ro.deliveries, (name, r)
+        assert np.array_equal(rf.mask, ro.mask)
+        assert np.array_equal(rf.scheduled, ro.scheduled)
+        assert rf.duration == ro.duration and rf.t0 == ro.t0
+        t_f += rf.duration
+        t_o += ro.duration
+
+
+@pytest.mark.parametrize("name", ASYNC_SCENARIOS)
+def test_async_stream_bit_for_bit(name):
+    d_f = Engine(get_scenario(name), seed=1).run_async(
+        0.0, MSG, n_deliveries=40)
+    d_o = Engine(get_scenario(name), seed=1, fast=False).run_async(
+        0.0, MSG, n_deliveries=40)
+    assert d_f == d_o, name
+
+
+def test_mega_1000_lossy_bit_for_bit():
+    """The scale + loss scenario — the CI perf-gate smoke runs this same
+    check via ``benchmarks/profile_round.py --check-equivalence``."""
+    eng_f = Engine(get_scenario("mega-1000-lossy"), fast=True)
+    eng_o = Engine(get_scenario("mega-1000-lossy"), fast=False)
+    t = 0.0
+    lost = 0
+    for _ in range(2):
+        rf, ro = eng_f.run_round(t, MSG), eng_o.run_round(t, MSG)
+        assert rf.deliveries == ro.deliveries
+        assert rf.duration == ro.duration
+        lost += sum(not d.delivered for d in rf.deliveries)
+        t += rf.duration
+    assert lost > 0, "mega-1000-lossy should actually lose deliveries"
+    d_f = eng_f.run_async(0.0, MSG, n_deliveries=40)
+    d_o = eng_o.run_async(0.0, MSG, n_deliveries=40)
+    assert d_f == d_o
+
+
+def test_nonuniform_seeds_and_message_sizes():
+    """Equivalence can't depend on the lucky defaults."""
+    for seed in (0, 3, 17):
+        for msg in (500.0, MSG, 2.5e6):
+            sc = get_scenario("lossy-uplink")
+            rf = Engine(sc, seed=seed).run_round(0.0, msg)
+            ro = Engine(sc, seed=seed, fast=False).run_round(0.0, msg)
+            assert rf.deliveries == ro.deliveries, (seed, msg)
+
+
+def test_channel_cache_tracks_installed_channel():
+    """SpaceRunner installs ``engine.channel`` AFTER construction; the
+    fast path's memoized plans must follow the live channel object."""
+    sc = Scenario(name="small", walker=Walker(n_sats=20, n_planes=4),
+                  stations=(GroundStation(),), k_direct=3, n_relay=2)
+    eng = Engine(sc)
+    r_clean = eng.run_round(0.0, MSG)           # caches built channel-less
+    ch = ChannelModel(loss=0.4, arq=SelectiveRepeatARQ(max_rounds=2))
+    eng.channel = ch                            # what SpaceRunner does
+    eng._refresh_blocked()
+    r_lossy = eng.run_round(0.0, MSG)
+    ref = Engine(dataclasses.replace(sc, channel=ch),
+                 fast=False).run_round(0.0, MSG)
+    assert r_lossy.deliveries == ref.deliveries
+    assert any(not d.delivered for d in r_lossy.deliveries)
+    assert all(d.delivered for d in r_clean.deliveries)
+
+
+# ---------------------------------------------------------------------------
+# supporting layers
+# ---------------------------------------------------------------------------
+
+def test_visibility_grid_matches_reference():
+    """The fused chunked grid must agree with the elevation-threshold
+    reference on every built-in geometry (chunking and the monotone
+    comparison rewrite are elementwise-equivalent)."""
+    cfgs = [
+        (Walker(), (GroundStation(), GroundStation(lat=78.23, lon=15.39)),
+         30.0, 2 * Walker().period),
+        (Walker(n_sats=20, n_planes=4), (GroundStation(),), 20.0, 7200.0),
+        (Walker(n_sats=20, n_planes=4), (GroundStation(mask_angle=89.9),),
+         10.0, 7200.0),
+        (Walker(n_sats=10, n_planes=3), (GroundStation(),), 10.0, 3600.0),
+        (Walker(n_sats=4, n_planes=2),
+         (GroundStation(lat=68.32, lon=-133.55),), 10.0, 3600.0),
+    ]
+    for w, stations, dt, horizon in cfgs:
+        ts = np.arange(0.0, horizon, dt)
+        for gs in stations:
+            np.testing.assert_array_equal(
+                visibility_grid(w, gs, ts), visible(w, gs, ts),
+                err_msg=f"n_sats={w.n_sats} station={gs}")
+    # chunk boundaries are invisible
+    w, gs = Walker(n_sats=20, n_planes=4), GroundStation()
+    ts = np.arange(0.0, 7200.0, 10.0)
+    np.testing.assert_array_equal(visibility_grid(w, gs, ts, chunk=7),
+                                  visibility_grid(w, gs, ts, chunk=512))
+
+
+def test_incremental_extension_matches_full_rebuild():
+    """``ContactPlan.ensure`` extends by propagating only the new time
+    segment; the merged window arrays must be bit-identical to a
+    from-scratch build over the doubled horizon — including windows that
+    were capped at the old horizon end and continue into the extension."""
+    cfgs = [
+        (Walker(), (GroundStation(), GroundStation(lat=78.23, lon=15.39)),
+         30.0, 3000.0),
+        (Walker(n_sats=20, n_planes=4), (GroundStation(),), 20.0, 1800.0),
+        (Walker(n_sats=50, n_planes=5),
+         (GroundStation(lat=68.32, lon=-133.55),), 10.0, 2500.0),
+    ]
+    for w, stations, dt, horizon in cfgs:
+        inc = ContactPlan(w, stations, horizon=horizon, dt=dt)
+        inc.ensure(3.3 * horizon)       # two doublings in one call
+        inc.ensure(7.9 * horizon)       # and another on top
+        full = ContactPlan(w, stations, horizon=inc.horizon, dt=dt)
+        assert inc.horizon == full.horizon
+        for g in range(len(stations)):
+            wmin = min(inc.rises[g].shape[1], full.rises[g].shape[1])
+            np.testing.assert_array_equal(inc.rises[g][:, :wmin],
+                                          full.rises[g][:, :wmin])
+            np.testing.assert_array_equal(inc.sets[g][:, :wmin],
+                                          full.sets[g][:, :wmin])
+            assert not np.isfinite(inc.rises[g][:, wmin:]).any()
+            assert not np.isfinite(full.rises[g][:, wmin:]).any()
+
+
+def test_arq_plan_replay_matches_transmit():
+    """``ArqPlan.replay`` reproduces ``transmit``'s TxResult bit-for-bit
+    for any (t_start, window_end), including mid-window truncation and
+    max-rounds exhaustion."""
+    link = LinkModel()
+    rng = np.random.default_rng(7)
+    for loss in (0.0, 0.1, 0.3, 1.0):
+        for max_rounds in (1, 2, 4):
+            ch = ChannelModel(loss=loss,
+                              arq=SelectiveRepeatARQ(max_rounds=max_rounds))
+            for _ in range(15):
+                nbytes = float(rng.choice([10.0, 1024.0, 12500.0, 5e6]))
+                sat = int(rng.integers(0, 100))
+                win = int(rng.integers(0, 300))
+                t0 = float(rng.uniform(0.0, 1e5))
+                wend = t0 + float(rng.choice([0.01, 0.2, 1.0, 1e9]))
+                ref = ch.transmit(link, nbytes, walker=None,
+                                  station_obj=None, gateway=sat, sat=sat,
+                                  t_start=t0, window_end=wend, seed=1,
+                                  station=0, window_id=win)
+                plan = ch.arq_plan(link, nbytes, sat=sat, seed=1,
+                                   station=0, window_id=win)
+                assert plan.replay(t0, wend) == ref
+    with pytest.raises(ValueError, match="time-invariant"):
+        ChannelModel(budget=LinkBudget()).arq_plan(
+            link, 1024.0, sat=0, seed=0, station=0, window_id=0)
+
+
+def test_topology_neighborhoods_match_oracle_order():
+    """The translation-symmetric (S, C) candidate arrays must list the
+    exact satellites, hop counts, AND insertion order of the oracle's
+    per-satellite BFS — order is load-bearing (est ties resolve to the
+    first minimum)."""
+    for walker in (Walker(), Walker(n_sats=60, n_planes=6),
+                   Walker(n_sats=10, n_planes=3),     # ragged → fallback
+                   Walker(n_sats=4, n_planes=2)):     # degenerate dedup
+        sc = Scenario(name="t", walker=walker, stations=(GroundStation(),),
+                      max_hops=4)
+        eng = Engine(sc)
+        topo = eng._fast_state().topo
+        for s in {0, walker.n_sats // 2, walker.n_sats - 1}:
+            ref = topo._bfs(s)
+            if topo.valid is None:
+                row = [(int(v), int(h))
+                       for v, h in zip(topo.ids[s], topo.hops[s])]
+            else:
+                row = [(int(v), int(h))
+                       for v, h, ok in zip(topo.ids[s], topo.hops[s],
+                                           topo.valid[s]) if ok]
+            assert row == ref, (walker.n_sats, s)
