@@ -338,6 +338,59 @@ def bench_fast_round(n_sats: int, rounds: int = 3, seed: int = 0,
     }
 
 
+def bench_trace_overhead(n_sats: int = 1000, rounds: int = 2, seed: int = 0,
+                         async_deliveries: int = 100) -> dict:
+    """Tracing overhead on mega-1000 sync + async rounds (ISSUE 6 gate).
+
+    Interleaved min-of-N of the SAME warmed engine trajectory with the
+    :mod:`repro.obs` tracer enabled (in-memory buffer — flush I/O is not
+    part of the per-round claim) vs disabled.  The enabled/disabled ratio
+    is the gated quantity and must stay under 1.05 at the 1000-sat scale
+    (hard-asserted here, gated against the baseline in BENCH_sim.json).
+
+    The *disabled* cost — instrumented engine vs the pre-instrumentation
+    engine — cannot be measured inside one build; it is covered by the
+    existing ``sim.fast_round`` / ``sim.engine_scale`` gates, which time
+    the instrumented engine with the tracer off against baselines
+    committed before the instrumentation landed.
+    """
+    from repro import obs
+    from repro.bench.timing import time_pair
+
+    eng = Engine(_scenario(n_sats), seed=seed)
+
+    def _run():
+        t = 0.0
+        for _ in range(rounds):
+            t += eng.run_round(t, MSG).duration
+        eng.run_async(0.0, MSG, n_deliveries=async_deliveries)
+        return ()
+
+    _run()                      # warm: plan build, caches, ARQ plans
+
+    n_events = 0
+
+    def _run_traced():
+        nonlocal n_events
+        trc = obs.enable()      # fresh in-memory tracer (path=None)
+        try:
+            _run()
+        finally:
+            n_events = len(trc.events)
+            obs.disable()
+
+    t_off, t_on = time_pair(_run, _run_traced, reps=7)
+    overhead = t_on / t_off
+    if n_sats >= 1000:
+        assert overhead < 1.05, (
+            f"tracing overhead {overhead:.3f}x breaches the <5% budget on "
+            f"mega-1000 ({n_events} events per trajectory) — emission "
+            f"must stay out of the hot event loops")
+    return {"n_sats": _scenario(n_sats).walker.n_sats, "rounds": rounds,
+            "async_deliveries": async_deliveries, "events": n_events,
+            "s_disabled": t_off, "s_enabled": t_on, "overhead": overhead}
+
+
 def main(quick: bool = False, rounds: int = 100, seed: int = 0) -> float:
     t_start = time.time()
     # the headline claim is defined at 100 rounds × 100 sats (--rounds)
@@ -388,6 +441,13 @@ def main(quick: bool = False, rounds: int = 100, seed: int = 0) -> float:
           f"{rf['sync_speedup']:.2f}x  async {rf['async_speedup']:.1f}x "
           f"vs oracle (bit-for-bit verified, "
           f"{rf['deliveries']} deliveries)")
+
+    # structured tracing stays out of the hot loops (ISSUE 6)
+    rt = bench_trace_overhead(100 if quick else 1000,
+                              rounds=2, seed=seed)
+    print(f"  trace overhead @ {rt['n_sats']} sats: "
+          f"{rt['overhead']:.3f}x enabled vs disabled "
+          f"({rt['events']} events/trajectory)")
 
     us = (time.time() - t_start) * 1e6
     print(f"sim_scale,{us:.0f},speedup={speedup:.1f},sats1000_ok={ok_1000},"

@@ -1,15 +1,20 @@
-"""Quickstart: communication-efficient federated learning in 40 lines.
+"""Quickstart: communication-efficient federated learning in 60 lines.
 
 Trains the paper's regularized logistic regression over 50 agents with
-bi-directional uniform quantization + error feedback (Algorithm 2), and
-prints the optimality-error trajectory vs the no-EF ablation (Algorithm 1).
+bi-directional uniform quantization + error feedback (Algorithm 2) vs the
+no-EF ablation (Algorithm 1), recording each run as a ``repro.obs``
+trace: per-round ``fl_round`` events plus byte counters, flushed to
+``quickstart_<variant>.jsonl`` and summarized with the obs renderer
+(the same table ``python -m repro.obs summarize`` prints).
 
 Run:  PYTHONPATH=src python examples/quickstart.py
 """
 import jax
 import jax.numpy as jnp
 
-from repro.core.compression import UniformQuantizer
+from repro import obs
+from repro.constellation.links import message_bytes
+from repro.core.compression import UniformQuantizer, wire_index_bits
 from repro.core.error_feedback import EFChannel
 from repro.core.fedlt import FedLT, optimality_error
 from repro.data.logistic import generate, make_local_loss, solve_global
@@ -22,6 +27,8 @@ def main():
     x_star = solve_global(data, eps=50.0)
 
     quant = UniformQuantizer(levels=10, vmin=-1, vmax=1, clip=True)
+    # nominal per-agent uplink: dim values at ceil(log2(levels+1)) bits
+    msg = message_bytes(dim, wire_index_bits(quant.levels))
     for ef in (False, True):
         alg = FedLT(loss=loss, n_epochs=10, gamma=0.005, rho=20.0,
                     uplink=EFChannel(quant, enabled=ef),
@@ -30,12 +37,22 @@ def main():
         active = jnp.ones((n_agents,), bool)
         step = jax.jit(lambda s, k: alg.round(s, data, active, k)[0])
         keys = jax.random.split(jax.random.PRNGKey(1), 400)
-        print(f"\n=== Algorithm {'2 (with EF)' if ef else '1 (no EF)'} ===")
-        for k in range(400):
-            state = step(state, keys[k])
-            if k % 80 == 0 or k == 399:
-                err = float(optimality_error(state.x, x_star))
-                print(f"  round {k:4d}   e_k = {err:.6f}")
+        name = "alg2_ef" if ef else "alg1_no_ef"
+        path = f"quickstart_{name}.jsonl"
+        with obs.tracing(path, example="quickstart", ef=ef) as trc:
+            up = trc.metrics.counter("bytes_up")
+            for k in range(400):
+                state = step(state, keys[k])
+                up.add(msg * n_agents)
+                if k % 80 == 0 or k == 399:
+                    err = float(optimality_error(state.x, x_star))
+                    trc.event("fl_round", round=k, t=float(k),
+                              bytes_up=up.total, n_active=n_agents,
+                              error=err)
+            records = trc.records()
+        print(f"\n=== Algorithm {'2 (with EF)' if ef else '1 (no EF)'} "
+              f"(trace: {path}) ===")
+        print(obs.render_rounds(records))
 
 
 if __name__ == "__main__":

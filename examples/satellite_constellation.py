@@ -10,14 +10,22 @@ dispatch per leaf over the whole agent stack) with per-cohort byte
 accounting (``SpaceRunner(measure="cohort")``) — then runs Fed-LTSat in
 buffered-asynchronous (FedBuff-style, staleness-weighted) mode on the
 dual-station scenario, and finally over the ``lossy-uplink`` channel
-scenario with loss-robust error feedback.  Reports error vs wall-clock
-time and uplink bytes for each.
+scenario with loss-robust error feedback.
+
+Every run records a ``repro.obs`` trace (``constellation_<name>.jsonl``:
+engine deliveries/cohorts/ARQ, federated rounds, EF reverts, metrics)
+and the report below is the obs per-round renderer over the traced
+``fl_round`` records — inspect any run afterwards with::
+
+    python -m repro.obs summarize constellation_fedltsat.jsonl
+    python -m repro.obs chrome constellation_fedltsat.jsonl
 
 Run:  PYTHONPATH=src python examples/satellite_constellation.py
 """
 import jax
 import jax.numpy as jnp
 
+from repro import obs
 from repro.core.baselines import FedAvg
 from repro.core.compression import UniformQuantizer
 from repro.core.error_feedback import EFChannel
@@ -36,17 +44,23 @@ def main(rounds=120):
     quant = UniformQuantizer(levels=10, vmin=-1, vmax=1, clip=True)
     up, down = EFChannel(quant), EFChannel(quant)
 
-    def report(name, logs):
-        print(f"\n=== {name} ===")
-        for log in logs:
-            if log.error is not None:
-                extra = (f"  stale={log.staleness:.2f}"
-                         if log.staleness is not None else "")
-                if log.n_lost:
-                    extra += f"  lost={log.n_lost}"
-                print(f"  round {log.round:4d}  t={log.time/3600:6.2f}h  "
-                      f"up={log.bytes_up/1e3:8.1f}kB  active={log.n_active:3d}  "
-                      f"e_k={log.error:.5f}{extra}")
+    def traced_run(name, runner, alg, st, key):
+        """One runner.run under a fresh obs trace; prints the obs
+        per-round table over the rounds that evaluated the error."""
+        slug = "".join(c for c in name.split(" ")[0].lower()
+                       if c.isalnum())
+        path = f"constellation_{slug}.jsonl"
+        with obs.tracing(path, example=name) as trc:
+            st, logs = runner.run(
+                alg, st, data, rounds, key,
+                error_fn=lambda s: optimality_error(s.x, x_star),
+                log_every=20)
+            records = trc.records()
+        evaluated = [r for r in records if r.get("kind") == "fl_round"
+                     and r.get("error") is not None]
+        print(f"\n=== {name} (trace: {path}) ===")
+        print(obs.render_rounds(evaluated))
+        return st, logs
 
     algs = {
         # fused_uplink=True: the compress→EF→pack chain runs as ONE Pallas
@@ -57,16 +71,13 @@ def main(rounds=120):
         "FedAvg(space)": FedAvg(loss=loss, n_epochs=10, gamma=0.05,
                                 uplink=up, downlink=down),
     }
-    engine = Engine(get_scenario("walker-kiruna"))
     for name, alg in algs.items():
         st = alg.init(jnp.zeros((dim,)), n_agents)
         # measure="cohort": bytes_up accounted from the actually-transmitted
         # wire state, batched per contact-window cohort
-        runner = SpaceRunner(engine, compressor=quant, measure="cohort")
-        st, logs = runner.run(alg, st, data, rounds, jax.random.PRNGKey(2),
-                              error_fn=lambda s: optimality_error(s.x, x_star),
-                              log_every=20)
-        report(name, logs)
+        runner = SpaceRunner(Engine(get_scenario("walker-kiruna")),
+                             compressor=quant, measure="cohort")
+        traced_run(name, runner, alg, st, jax.random.PRNGKey(2))
 
     # buffered-async: two ground stations, staleness-weighted aggregation
     alg = algs["Fed-LTSat"]
@@ -74,10 +85,8 @@ def main(rounds=120):
     runner = SpaceRunner(Engine(get_scenario("dual-station")),
                          compressor=quant,
                          mode="async", buffer_size=10, staleness_alpha=0.5)
-    st, logs = runner.run(alg, st, data, rounds, jax.random.PRNGKey(3),
-                          error_fn=lambda s: optimality_error(s.x, x_star),
-                          log_every=20)
-    report("Fed-LTSat (async, dual-station)", logs)
+    traced_run("async (Fed-LTSat, dual-station)", runner, alg, st,
+               jax.random.PRNGKey(3))
 
     # lossy uplink: 10% segment erasures with selective-repeat ARQ; lost
     # updates keep their EF residual (loss-robust EF) so their content
@@ -85,10 +94,8 @@ def main(rounds=120):
     st = alg.init(jnp.zeros((dim,)), n_agents)
     runner = SpaceRunner(Engine(get_scenario("lossy-uplink")),
                          compressor=quant, measure="cohort")
-    st, logs = runner.run(alg, st, data, rounds, jax.random.PRNGKey(4),
-                          error_fn=lambda s: optimality_error(s.x, x_star),
-                          log_every=20)
-    report("Fed-LTSat (lossy uplink, loss-robust EF)", logs)
+    traced_run("lossy (Fed-LTSat, loss-robust EF)", runner, alg, st,
+               jax.random.PRNGKey(4))
 
 
 if __name__ == "__main__":

@@ -28,6 +28,31 @@ def emit(results, directory: str, tiny: bool) -> None:
         print(f"wrote {path}")
 
 
+def emit_trace(directory: str) -> str:
+    """Capture a mega-1000 obs trace next to the BENCH files.
+
+    A dedicated post-bench pass — tracing is never enabled inside the
+    timed bench regions, where buffering would perturb the gated ratios.
+    CI runs ``python -m repro.obs check`` on the result (bytes
+    conservation + ordering) and uploads it as an artifact, so every
+    perf-gate run leaves an inspectable round timeline behind.
+    """
+    from repro import obs
+    from repro.constellation.links import message_bytes
+    from repro.sim import Engine, get_scenario
+
+    path = os.path.join(directory, "TRACE_mega-1000.jsonl")
+    eng = Engine(get_scenario("mega-1000"))
+    msg = message_bytes(10000, 10.0)
+    with obs.tracing(path, scenario="mega-1000", source="repro.bench"):
+        t = 0.0
+        for _ in range(2):
+            t += eng.run_round(t, msg).duration
+        eng.run_async(0.0, msg, n_deliveries=50)
+    print(f"wrote {path}")
+    return path
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(prog="python -m repro.bench",
                                  description=__doc__)
@@ -39,6 +64,9 @@ def main(argv=None) -> int:
                     help="run only these registered benchmarks")
     ap.add_argument("--list", action="store_true",
                     help="list registered benchmarks and exit")
+    ap.add_argument("--no-trace", action="store_true",
+                    help="skip the post-bench mega-1000 obs trace capture "
+                         "(TRACE_mega-1000.jsonl next to the BENCH files)")
     args = ap.parse_args(argv)
 
     if args.list:
@@ -49,6 +77,8 @@ def main(argv=None) -> int:
     results = run_benchmarks(args.only, tiny=args.tiny)
     if args.emit:
         emit(results, args.emit, args.tiny)
+        if not args.no_trace:
+            emit_trace(args.emit)
     return 0
 
 

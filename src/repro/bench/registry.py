@@ -239,6 +239,31 @@ def _sim_fast_round(tiny: bool) -> Dict[str, dict]:
 
 
 @register_benchmark(
+    "sim.trace_overhead", "sim",
+    "repro.obs structured tracing on mega-1000 sync+async rounds: "
+    "enabled-vs-disabled wall-clock ratio (<5% hard-asserted; disabled "
+    "cost is covered by the sim.fast_round/engine_scale gates, whose "
+    "baselines predate the instrumentation)")
+def _sim_trace_overhead(tiny: bool) -> Dict[str, dict]:
+    from benchmarks.sim_scale import bench_trace_overhead
+    # mega-1000 runs even in the tiny CI set: the overhead ratio IS the
+    # claim, and a 2-round trajectory keeps it CI-cheap.  Gate direction:
+    # lower is better, baseline ~1.0x, so the ±20% gate trips well before
+    # emission cost could silently creep toward the hot loops.
+    r = bench_trace_overhead(1000, rounds=2)
+    return {
+        "n1000_s_disabled": metric(r["s_disabled"], "s",
+                                   higher_is_better=False),
+        "n1000_s_enabled": metric(r["s_enabled"], "s",
+                                  higher_is_better=False),
+        "n1000_overhead": metric(r["overhead"], "x", higher_is_better=False,
+                                 gate=True),
+        "n1000_events": metric(r["events"], "events",
+                               higher_is_better=True),
+    }
+
+
+@register_benchmark(
     "sim.engine_scale", "sim",
     "discrete-event engine throughput (cold plan build + sync rounds + "
     "async deliveries) at 100/1000/10000-satellite scale")

@@ -31,6 +31,7 @@ from typing import Optional
 
 from ..constellation.links import LinkModel
 from ..constellation.orbits import GroundStation, Walker
+from ..obs.trace import active as _obs_active
 from .arq import ArqPlan, SelectiveRepeatARQ, TxResult
 from .budget import LinkBudget, elevation_at
 from .outage import ConjunctionBlackout, RainFade, counter_uniforms
@@ -161,6 +162,27 @@ class ChannelModel:
                 elevation_at(walker, station_obj, gateway, t),
                 self.arq.seg_bytes, fade)
 
-        return self.arq.transmit(nbytes, t_start, window_end, rate=rate_at,
-                                 p_seg=p_at, latency=link.gs_latency,
-                                 draw=draw)
+        res = self.arq.transmit(nbytes, t_start, window_end, rate=rate_at,
+                                p_seg=p_at, latency=link.gs_latency,
+                                draw=draw)
+        trc = _obs_active()
+        if trc is not None:
+            # budget-branch only: link-budget state per transmission.  The
+            # fixed-rate branch stays silent — the fast engine replays
+            # those via ArqPlan without calling transmit(), and per-link
+            # SNR is a constant there anyway.  "link" events are therefore
+            # NOT part of obs.summary.DIFF_KINDS.
+            el = elevation_at(walker, station_obj, gateway, t_start)
+            trc.event("link", station=int(station), sat=int(sat),
+                      gateway=int(gateway), window_id=int(window_id),
+                      t_start=float(t_start),
+                      elevation_deg=float(el), fade_db=float(fade),
+                      rate=float(self.budget.rate(el, fade)),
+                      p_seg=float(res.p_seg), retries=int(res.retries),
+                      delivered=bool(res.delivered),
+                      nbytes_attempted=float(res.nbytes_attempted),
+                      t_done=float(res.t_done))
+            if fade > 0.0:
+                trc.metrics.histogram("fade_db").observe(float(fade))
+            trc.metrics.histogram("link_p_seg").observe(float(res.p_seg))
+        return res

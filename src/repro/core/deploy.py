@@ -119,16 +119,25 @@ class DeployFedLT:
             w, losses = jax.lax.scan(epoch, x_i, None, length=self.n_epochs)
             return w, losses[-1]
 
-        v = tree_map(lambda y, z: (2.0 * y - z).astype(z.dtype),
-                     state.y_hat, state.z)
-        x_new, last_loss = jax.vmap(local_train)(state.x, v, batch)
-        z_new = tree_map(lambda z, xn, y: z + 2.0 * (xn - y),
-                         state.z, x_new, state.y_hat)
+        # jax.named_scope: names the round's stages inside jaxprs/HLO and
+        # jax.profiler traces — the device-side counterpart of the host
+        # spans repro.obs records (annotations survive jit; no-ops
+        # otherwise)
+        with jax.named_scope("fedlt.local_train"):
+            v = tree_map(lambda y, z: (2.0 * y - z).astype(z.dtype),
+                         state.y_hat, state.z)
+            x_new, last_loss = jax.vmap(local_train)(state.x, v, batch)
+            z_new = tree_map(lambda z, xn, y: z + 2.0 * (xn - y),
+                             state.z, x_new, state.y_hat)
 
         # ---- uplink: quantize + EF; integer tensor crosses the slow link --
         if self.compress:
             bits = self.wire_word_bits
             interp = jax.default_backend() != "tpu"
+
+            def _fused_uplink(z, c, **kw):
+                with jax.named_scope("fedlt.uplink.fused_pipeline"):
+                    return quant_pipeline(z, c, **kw)
 
             def uplink_leaf(z, c, spec):
                 """One parameter tensor through uplink EF + wire: returns
@@ -144,7 +153,7 @@ class DeployFedLT:
                 """
                 if (self.pack_wire and self.fuse_pipeline
                         and z.size >= _TILE_VALS):
-                    words, newc = quant_pipeline(
+                    words, newc = _fused_uplink(
                         z, c, levels=self.levels, vmin=self.vmin,
                         vmax=self.vmax, interpret=interp)
                     if spec is not None:
@@ -175,26 +184,33 @@ class DeployFedLT:
             specs = (treedef.flatten_up_to(agent_replicate_spec)
                      if agent_replicate_spec is not None
                      else [None] * len(leaves_z))
-            pairs = [uplink_leaf(z, c, s)
-                     for z, c, s in zip(leaves_z, leaves_c, specs)]
+            with jax.named_scope("fedlt.uplink"):
+                pairs = [uplink_leaf(z, c, s)
+                         for z, c, s in zip(leaves_z, leaves_c, specs)]
             gathered = treedef.unflatten([g for g, _ in pairs])
             c_up_new = treedef.unflatten([nc for _, nc in pairs])
-            z_bar = tree_map(lambda g: jnp.mean(g, axis=0), gathered)
+            with jax.named_scope("fedlt.aggregate"):
+                z_bar = tree_map(lambda g: jnp.mean(g, axis=0), gathered)
         else:
             c_up_new = state.c_up
-            z_bar = tree_map(lambda z: jnp.mean(z, axis=0), z_new)
+            with jax.named_scope("fedlt.aggregate"):
+                z_bar = tree_map(lambda z: jnp.mean(z, axis=0), z_new)
 
         # ---- coordinator aggregate + downlink EF --------------------------
-        y = tree_map(lambda c, zb: c + zb.astype(c.dtype), state.c_down, z_bar)
-        if self.compress:
-            y_int = tree_map(
-                lambda m: quantize_encode(m, self.levels, self.vmin, self.vmax), y)
-            y_hat = tree_map(
-                lambda w, m: quantize_decode(w, self.levels, self.vmin,
-                                             self.vmax, m.dtype), y_int, y)
-            c_down_new = tree_map(jnp.subtract, y, y_hat)
-        else:
-            y_hat, c_down_new = y, state.c_down
+        with jax.named_scope("fedlt.downlink"):
+            y = tree_map(lambda c, zb: c + zb.astype(c.dtype),
+                         state.c_down, z_bar)
+            if self.compress:
+                y_int = tree_map(
+                    lambda m: quantize_encode(m, self.levels, self.vmin,
+                                              self.vmax), y)
+                y_hat = tree_map(
+                    lambda w, m: quantize_decode(w, self.levels, self.vmin,
+                                                 self.vmax, m.dtype),
+                    y_int, y)
+                c_down_new = tree_map(jnp.subtract, y, y_hat)
+            else:
+                y_hat, c_down_new = y, state.c_down
 
         new_state = DeployState(x=x_new, z=z_new, c_up=c_up_new, y_hat=y_hat,
                                 c_down=c_down_new, k=state.k + 1)

@@ -36,6 +36,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..constellation.links import message_bytes
+from ..obs.trace import active as _obs_active
 from .compression import Compressor
 from .pytree import tree_map, tree_size, tree_split_keys, tree_where_mask
 
@@ -197,8 +198,14 @@ class SpaceRunner:
         t, up_bytes = 0.0, 0.0
         logs: List[RoundLog] = []
         keys = jax.random.split(key, n_rounds)
+        trc = _obs_active()       # read once; None ⇒ tracing fully off
         for k in range(n_rounds):
-            res = self.engine.run_round(t, msg)
+            if trc is None:
+                res = self.engine.run_round(t, msg)
+            else:
+                with trc.span("stage", name="engine.run_round", round=k):
+                    res = self.engine.run_round(t, msg)
+            t_round0 = t
             delivered = res.mask
             attempted = np.zeros_like(delivered)
             for d in res.deliveries:
@@ -210,16 +217,37 @@ class SpaceRunner:
             # round, then the coordinator-side wire is reverted below
             # (the coordinator can only know what actually landed)
             active_np = attempted if lossy else delivered
-            state_new, _ = round_fn(state, data, jnp.asarray(active_np),
-                                    keys[k])
+            if trc is None:
+                state_new, _ = round_fn(state, data, jnp.asarray(active_np),
+                                        keys[k])
+            else:
+                with trc.span("stage", name="alg.round", round=k,
+                              n_active=int(active_np.sum())):
+                    state_new, _ = round_fn(state, data,
+                                            jnp.asarray(active_np), keys[k])
             # what each satellite actually put on the air this round — for
             # lost satellites that is the PRE-revert wire, so cohort byte
             # accounting below must measure this state, not the final one
             tx_state = state_new
             if lossy:
+                absorb = self.loss_robust and has_cache
                 state_new = _revert_lost_wires(
                     state_new, state, wire_field, jnp.asarray(lost),
-                    absorb=self.loss_robust and has_cache)
+                    absorb=absorb)
+                if trc is not None:
+                    # resid_norm: ‖c_up[lost]‖ after the revert — the EF
+                    # content kept telescoping instead of vanishing
+                    lost_idx = np.nonzero(lost)[0]
+                    norm2 = 0.0
+                    if has_cache:
+                        for leaf in jax.tree_util.tree_leaves(state_new.c_up):
+                            arr = np.asarray(leaf[lost_idx], dtype=np.float64)
+                            norm2 += float((arr * arr).sum())
+                    trc.event("ef_revert", round=k, n_lost=int(lost.sum()),
+                              sats=[int(s) for s in lost_idx],
+                              absorb=bool(absorb),
+                              resid_norm=float(np.sqrt(norm2)))
+                    trc.metrics.counter("ef_reverts").add(float(lost.sum()))
             state = state_new
             t += res.duration
             # bytes_up = what actually crossed the GS links this round —
@@ -239,6 +267,18 @@ class SpaceRunner:
                                                 or k == n_rounds - 1) else None)
             logs.append(RoundLog(k, t, up_bytes, int(delivered.sum()), err,
                                  n_lost=int(lost.sum())))
+            if trc is not None:
+                # downlink ledger: the coordinator rebroadcasts the model
+                # to every satellite it scheduled (not modeled by the
+                # engine's uplink timeline, so accounted here)
+                trc.metrics.counter("bytes_down").add(
+                    msg * float(res.scheduled.sum()))
+                trc.event("fl_round", round=k, t0=float(t_round0),
+                          t=float(t), bytes_up=float(up_bytes),
+                          n_active=int(delivered.sum()),
+                          n_lost=int(lost.sum()),
+                          error=err if err == err else None,
+                          mode="sync")
         return state, logs
 
     # -- buffered-async (FedBuff-style) -------------------------------------
@@ -248,8 +288,15 @@ class SpaceRunner:
         n_agents = jax.tree_util.tree_leaves(state.x)[0].shape[0]
         wire_field = "z_hat" if hasattr(state, "z_hat") else "m_hat"
 
-        records = self.engine.run_async(
-            0.0, msg, n_deliveries=n_rounds * self.buffer_size)
+        trc = _obs_active()       # read once; None ⇒ tracing fully off
+        if trc is None:
+            records = self.engine.run_async(
+                0.0, msg, n_deliveries=n_rounds * self.buffer_size)
+        else:
+            with trc.span("stage", name="engine.run_async",
+                          n_deliveries=n_rounds * self.buffer_size):
+                records = self.engine.run_async(
+                    0.0, msg, n_deliveries=n_rounds * self.buffer_size)
         # only landed updates feed the aggregator; with a lossy channel the
         # record list also holds failed attempts, whose air bytes still
         # count toward the uplink ledger below
@@ -271,20 +318,42 @@ class SpaceRunner:
                     agg_times, d.t_start)
             weights = np.where(active_np,
                                (1.0 + stale) ** (-self.staleness_alpha), 1.0)
-            new_state, _ = round_fn(state, data, jnp.asarray(active_np),
-                                    keys[k])
+            if trc is None:
+                new_state, _ = round_fn(state, data, jnp.asarray(active_np),
+                                        keys[k])
+            else:
+                with trc.span("stage", name="alg.round", round=k,
+                              n_active=int(active_np.sum())):
+                    new_state, _ = round_fn(state, data,
+                                            jnp.asarray(active_np), keys[k])
             state = _damp_wires(new_state, state, wire_field,
                                 jnp.asarray(weights))
+            t0_agg = chunk[0].t_start
             t = chunk[-1].t_done
             agg_times.append(t)
+            n_lost_win = 0
             while rec_ptr < len(records) and records[rec_ptr].t_done <= t:
                 up_bytes += records[rec_ptr].nbytes_attempted
+                n_lost_win += not records[rec_ptr].delivered
                 rec_ptr += 1
             err = (float(error_fn(state))
                    if error_fn is not None and (k % log_every == 0
                                                 or k == n_rounds - 1) else None)
+            mean_stale = float(stale[active_np].mean())
             logs.append(RoundLog(k, t, up_bytes, int(active_np.sum()), err,
-                                 staleness=float(stale[active_np].mean())))
+                                 staleness=mean_stale))
+            if trc is not None:
+                hist = trc.metrics.histogram("staleness")
+                for d in chunk:
+                    hist.observe(float(stale[d.sat]))
+                trc.metrics.counter("bytes_down").add(
+                    msg * float(active_np.sum()))
+                trc.event("fl_round", round=k, t0=float(t0_agg),
+                          t=float(t), bytes_up=float(up_bytes),
+                          n_active=int(active_np.sum()),
+                          n_lost=n_lost_win, staleness=mean_stale,
+                          error=err if err == err else None,
+                          mode="async")
         return state, logs
 
 

@@ -2,11 +2,21 @@
 
 ``use_pallas`` selects the kernel path; interpret mode is chosen
 automatically (CPU → interpret=True for validation, TPU → compiled kernel).
+
+Every wrapper is wrapped in a dispatch hook (:func:`_traced`): with an
+active :mod:`repro.obs` tracer each call runs under a
+``jax.profiler.TraceAnnotation`` (so the dispatch shows up named inside
+``jax.profiler.trace`` captures) and records a host-side ``kernel`` span
+(dispatch time — device compute is async and belongs to the profiler).
+Disabled, the hook is one module attribute read and a ``None`` check.
 """
 from __future__ import annotations
 
+import functools
+
 import jax
 
+from ..obs.trace import active as _obs_active
 from . import ref
 from .compress_pipeline import quant_pipeline as _quant_pipeline
 from .compress_pipeline import sign_pipeline as _sign_pipeline
@@ -21,6 +31,25 @@ def _interpret() -> bool:
     return jax.default_backend() != "tpu"
 
 
+def _traced(fn):
+    """Kernel-dispatch trace hook (zero-cost with no active tracer)."""
+    name = fn.__name__
+
+    @functools.wraps(fn)
+    def wrapper(*args, **kwargs):
+        trc = _obs_active()
+        if trc is None:
+            return fn(*args, **kwargs)
+        with jax.profiler.TraceAnnotation(f"repro.kernels.{name}"), \
+                trc.span("kernel", name=name):
+            out = fn(*args, **kwargs)
+        trc.metrics.counter("kernel_dispatches").add(1.0, name=name)
+        return out
+
+    return wrapper
+
+
+@_traced
 def pack_bits(x, bits: int, *, use_pallas: bool = True):
     """Pack b-bit values into uint32 wire words (repro.wire layout)."""
     if not use_pallas:
@@ -28,6 +57,7 @@ def pack_bits(x, bits: int, *, use_pallas: bool = True):
     return _pack_bits(x, bits, interpret=_interpret())
 
 
+@_traced
 def unpack_bits(words, bits: int, n: int, *, use_pallas: bool = True):
     """Inverse of :func:`pack_bits`: first ``n`` values, flat uint32."""
     if not use_pallas:
@@ -35,6 +65,7 @@ def unpack_bits(words, bits: int, n: int, *, use_pallas: bool = True):
     return _unpack_bits(words, bits, n, interpret=_interpret())
 
 
+@_traced
 def quantize_ef(msg, cache, *, levels=255, vmin=-0.25, vmax=0.25,
                 use_pallas: bool = True):
     if not use_pallas:
@@ -44,6 +75,7 @@ def quantize_ef(msg, cache, *, levels=255, vmin=-0.25, vmax=0.25,
                      interpret=_interpret())
 
 
+@_traced
 def quant_pipeline(msg, cache, *, levels=255, vmin=-1.0, vmax=1.0,
                    use_pallas: bool = True):
     """Fused quantize→EF→pack sweep: (msg, cache) → (wire words, new cache).
@@ -58,6 +90,7 @@ def quant_pipeline(msg, cache, *, levels=255, vmin=-1.0, vmax=1.0,
                            interpret=_interpret())
 
 
+@_traced
 def sign_pipeline(msg, cache, *, use_pallas: bool = True):
     """Fused scaled-sign→EF→1-bit-pack sweep → (words, scale, new cache)."""
     if not use_pallas:
@@ -65,6 +98,7 @@ def sign_pipeline(msg, cache, *, use_pallas: bool = True):
     return _sign_pipeline(msg, cache, interpret=_interpret())
 
 
+@_traced
 def erasure_mask(words, *, p: float, seed: int = 0, segment_words: int = 32,
                  use_pallas: bool = True):
     """Counter-based segment erasure over packed wire words → (masked,
@@ -76,6 +110,7 @@ def erasure_mask(words, *, p: float, seed: int = 0, segment_words: int = 32,
                          interpret=_interpret())
 
 
+@_traced
 def attention(q, k, v, *, causal=True, window=None, softcap=None,
               use_pallas: bool = True, block_q: int = 128, block_k: int = 128):
     """(B,S,H,D) attention; kv heads must be pre-expanded to match q."""

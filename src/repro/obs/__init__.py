@@ -1,0 +1,50 @@
+"""Observability: structured tracing + metrics for the constellation sim
+and the federated stack.
+
+The paper's claims are about *communication* — fewer uplinks, smaller
+wires, error feedback recovering compression loss — so this subsystem
+makes the communication visible: where bytes, retries, and staleness
+accumulate inside a round, per link and per contact window, instead of
+end-of-run aggregates only.
+
+Three layers:
+
+* :mod:`repro.obs.trace` — a zero-overhead-when-disabled :class:`Tracer`
+  of typed event records (round, delivery, ARQ retransmission, cohort,
+  EF revert, kernel dispatch, link-budget sample), emitted by the
+  instrumented engine (both the heapq oracle and the fast batch engine —
+  same schema), ``SpaceRunner``, the channel stack, and
+  :mod:`repro.kernels.ops`;
+* :mod:`repro.obs.metrics` — counters/histograms (bytes per link,
+  retransmitted bytes, delivery latency, staleness, lost fraction)
+  snapshotted into every trace;
+* :mod:`repro.obs.summary` / :mod:`repro.obs.chrome` — summarize, diff
+  (localize the first fast-vs-oracle divergence), check invariants
+  (bytes conservation — the CI smoke), and export Chrome/Perfetto
+  traces.
+
+Quickstart::
+
+    from repro import obs
+    with obs.tracing("run.jsonl", scenario="mega-1000"):
+        runner.run(alg, state, data, n_rounds=50, key=key)
+    # then:  python -m repro.obs summarize run.jsonl
+    #        python -m repro.obs diff fast.jsonl oracle.jsonl
+    #        python -m repro.obs check run.jsonl
+    #        python -m repro.obs chrome run.jsonl -o run.perfetto.json
+
+Disabled (the default) the only cost anywhere in the stack is a module
+attribute read per round / per kernel dispatch — enforced by the gated
+``sim.trace_overhead`` benchmark (<5% enabled, parity disabled).
+"""
+from .chrome import chrome_trace, write_chrome_trace
+from .metrics import Counter, Histogram, Metrics
+from .summary import check, diff, render_rounds, summarize
+from .trace import (Tracer, active, disable, enable, load, tracing)
+
+__all__ = [
+    "Tracer", "active", "enable", "disable", "tracing", "load",
+    "Metrics", "Counter", "Histogram",
+    "summarize", "render_rounds", "diff", "check",
+    "chrome_trace", "write_chrome_trace",
+]

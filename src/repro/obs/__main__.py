@@ -1,0 +1,85 @@
+"""CLI: summarize, diff, check, and export obs traces.
+
+    python -m repro.obs summarize TRACE.jsonl
+    python -m repro.obs diff FAST.jsonl ORACLE.jsonl [--kinds delivery round]
+    python -m repro.obs check TRACE.jsonl [MORE.jsonl ...]
+    python -m repro.obs chrome TRACE.jsonl -o TRACE.perfetto.json
+    python -m repro.obs --check TRACE.jsonl          # alias for `check`
+
+``diff`` exits 1 on the first divergence (printing the record index and
+field delta), ``check`` exits 1 on any violated invariant — both are CI
+primitives: the perf gate runs ``check`` on the trace the bench harness
+emits next to BENCH_*.json (bytes conservation), and equivalence tests
+run ``diff`` over fast-vs-oracle traces.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+
+from .chrome import write_chrome_trace
+from .summary import DIFF_KINDS, check, diff, summarize
+from .trace import load
+
+
+def main(argv=None) -> int:
+    argv = list(sys.argv[1:] if argv is None else argv)
+    if argv and argv[0] == "--check":       # `repro.obs --check F` alias
+        argv[0] = "check"
+    ap = argparse.ArgumentParser(prog="python -m repro.obs",
+                                 description=__doc__)
+    sub = ap.add_subparsers(dest="cmd", required=True)
+
+    p = sub.add_parser("summarize", help="per-round summary table")
+    p.add_argument("trace")
+
+    p = sub.add_parser("diff", help="localize the first divergence "
+                                    "between two traces")
+    p.add_argument("trace_a")
+    p.add_argument("trace_b")
+    p.add_argument("--kinds", nargs="*", default=None,
+                   help=f"event kinds to compare (default: "
+                        f"{' '.join(DIFF_KINDS)})")
+
+    p = sub.add_parser("check", help="assert trace invariants "
+                                     "(bytes conservation, ordering)")
+    p.add_argument("traces", nargs="+")
+
+    p = sub.add_parser("chrome", help="export a Perfetto-loadable "
+                                      "Chrome trace")
+    p.add_argument("trace")
+    p.add_argument("-o", "--out", default=None,
+                   help="output path (default: <trace>.perfetto.json)")
+
+    args = ap.parse_args(argv)
+
+    if args.cmd == "summarize":
+        print(summarize(load(args.trace)))
+        return 0
+    if args.cmd == "diff":
+        equal, report = diff(load(args.trace_a), load(args.trace_b),
+                             kinds=args.kinds)
+        print(report)
+        return 0 if equal else 1
+    if args.cmd == "check":
+        rc = 0
+        for path in args.traces:
+            bad = check(load(path))
+            if bad:
+                rc = 1
+                print(f"{path}: {len(bad)} invariant violation(s)")
+                for msg in bad:
+                    print(f"  {msg}")
+            else:
+                print(f"{path}: all invariants hold")
+        return rc
+    if args.cmd == "chrome":
+        out = args.out or args.trace + ".perfetto.json"
+        write_chrome_trace(load(args.trace), out)
+        print(f"wrote {out} — open in https://ui.perfetto.dev")
+        return 0
+    return 2
+
+
+if __name__ == "__main__":
+    sys.exit(main())

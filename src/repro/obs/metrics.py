@@ -1,0 +1,119 @@
+"""Counters and histograms for the sim / federated stack.
+
+A :class:`Metrics` registry is owned by each :class:`repro.obs.trace.
+Tracer`; the instrumented layers bump it alongside event emission:
+
+    bytes_air{station=g}      uplink bytes put on the air per GS link
+    bytes_retx                retransmitted / truncated-attempt bytes
+    bytes_down                nominal coordinator broadcast bytes
+    deliveries{status=...}    delivered / lost counts
+    delivery_latency          histogram of t_done − t_start (seconds)
+    staleness                 histogram of aggregation staleness (async)
+    lost_frac                 histogram of per-round lost fraction
+
+Everything is plain-python (no numpy in the hot increment path) and
+serializes through :meth:`Metrics.to_dict` into the trace's final JSONL
+record.
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Optional, Sequence, Tuple
+
+# default histogram bucket upper bounds: ~log-spaced, generous range so
+# one set covers seconds-scale latencies, staleness counts, and fractions
+DEFAULT_BOUNDS = (0.01, 0.1, 0.5, 1.0, 5.0, 10.0, 60.0, 300.0, 1800.0,
+                  7200.0, 43200.0)
+
+
+class Counter:
+    """Labelled monotone counter: ``add(v, station=3)`` accumulates into
+    the ``(("station", 3),)`` cell; unlabelled adds use the ``()`` cell."""
+
+    __slots__ = ("cells",)
+
+    def __init__(self):
+        self.cells: Dict[Tuple, float] = {}
+
+    def add(self, value: float = 1.0, **labels) -> None:
+        key = tuple(sorted(labels.items()))
+        self.cells[key] = self.cells.get(key, 0.0) + value
+
+    @property
+    def total(self) -> float:
+        return sum(self.cells.values())
+
+    def to_dict(self) -> dict:
+        out = {"total": self.total}
+        labelled = {",".join(f"{k}={v}" for k, v in key): val
+                    for key, val in sorted(self.cells.items()) if key}
+        if labelled:
+            out["cells"] = labelled
+        return out
+
+
+class Histogram:
+    """Fixed-bound histogram with count/sum/min/max sidecar stats."""
+
+    __slots__ = ("bounds", "counts", "count", "sum", "min", "max")
+
+    def __init__(self, bounds: Optional[Sequence[float]] = None):
+        self.bounds = tuple(bounds) if bounds is not None else DEFAULT_BOUNDS
+        self.counts = [0] * (len(self.bounds) + 1)   # +1: overflow bucket
+        self.count = 0
+        self.sum = 0.0
+        self.min = math.inf
+        self.max = -math.inf
+
+    def observe(self, value: float) -> None:
+        i = 0
+        for b in self.bounds:
+            if value <= b:
+                break
+            i += 1
+        self.counts[i] += 1
+        self.count += 1
+        self.sum += value
+        if value < self.min:
+            self.min = value
+        if value > self.max:
+            self.max = value
+
+    @property
+    def mean(self) -> float:
+        return self.sum / self.count if self.count else 0.0
+
+    def to_dict(self) -> dict:
+        return {"count": self.count, "sum": self.sum, "mean": self.mean,
+                "min": self.min if self.count else None,
+                "max": self.max if self.count else None,
+                "bounds": list(self.bounds), "counts": list(self.counts)}
+
+
+class Metrics:
+    """Name → Counter/Histogram registry (created on first touch)."""
+
+    __slots__ = ("counters", "histograms")
+
+    def __init__(self):
+        self.counters: Dict[str, Counter] = {}
+        self.histograms: Dict[str, Histogram] = {}
+
+    def counter(self, name: str) -> Counter:
+        c = self.counters.get(name)
+        if c is None:
+            c = self.counters[name] = Counter()
+        return c
+
+    def histogram(self, name: str,
+                  bounds: Optional[Sequence[float]] = None) -> Histogram:
+        h = self.histograms.get(name)
+        if h is None:
+            h = self.histograms[name] = Histogram(bounds)
+        return h
+
+    def to_dict(self) -> dict:
+        return {"counters": {k: c.to_dict()
+                             for k, c in sorted(self.counters.items())},
+                "histograms": {k: h.to_dict()
+                               for k, h in sorted(self.histograms.items())}}

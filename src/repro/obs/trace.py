@@ -1,0 +1,178 @@
+"""Structured tracer: typed event records with a zero-cost disabled path.
+
+One :class:`Tracer` is active at a time (module global ``TRACER``); hot
+paths read it ONCE per round into a local and branch on ``None`` — the
+entire disabled-mode cost is that attribute read, which is why the
+``sim.trace_overhead`` bench can show tracing-disabled rounds at parity
+with the pre-instrumentation engine (the existing ``sim.fast_round``
+gates double as the disabled-overhead regression gate: they time the
+instrumented engine with the tracer off against the committed baseline).
+
+Events are plain dicts with a ``kind`` field, buffered in memory and
+flushed as JSONL (first record is a schema header, last is the
+:class:`~repro.obs.metrics.Metrics` snapshot).  Two clocks coexist:
+
+* **sim time** — event fields named ``t``/``t0``/``t_done`` carry
+  simulated seconds (the engine's clock);
+* **host time** — :meth:`Tracer.span` records wall-clock begin/duration
+  (``t_host``/``dur_host`` seconds since tracer start) for stage timings
+  (uplink encode, aggregation, kernel dispatches).
+
+Event kinds emitted by the instrumented stack:
+
+    ``round``      one engine sync round (t0, duration, counts, air bytes)
+    ``delivery``   one :class:`repro.sim.engine.Delivery` (``to_dict``)
+    ``arq``        a delivery that needed retransmissions or was lost
+    ``cohort``     one contact-window delivery cohort
+    ``async_run``  summary of one ``Engine.run_async`` stream
+    ``fl_round``   one federated round (SpaceRunner: bytes, error, staleness)
+    ``ef_revert``  loss-robust EF revert (lost sats + residual norm)
+    ``kernel``     one kernel-dispatch span (repro.kernels.ops)
+    ``span``       generic host-time stage span
+    ``link``       channel link-budget sample (elevation, fade, p_seg)
+    ``outage``     blocked-window refresh summary per station
+
+``trace-diff`` (:mod:`repro.obs.summary`) compares the deterministic
+sim-schema kinds (round/delivery/arq/cohort) and ignores host-timing
+fields, so fast-vs-oracle engine traces diff clean whenever the Delivery
+timelines agree — and localize the FIRST diverging record when they
+don't.
+"""
+from __future__ import annotations
+
+import contextlib
+import json
+import time
+from typing import List, Optional
+
+from .metrics import Metrics
+
+SCHEMA_VERSION = 1
+
+# the active tracer; hot paths read this once per round via active()
+TRACER: Optional["Tracer"] = None
+_STACK: List["Tracer"] = []
+
+# host-timing fields trace-diff must ignore (nondeterministic wall clock)
+HOST_FIELDS = ("t_host", "dur_host")
+
+
+class Tracer:
+    """In-memory event buffer + metrics registry with JSONL flush.
+
+    ``path=None`` keeps everything in memory (tests, overhead benches);
+    a path writes JSONL on :meth:`flush` / :meth:`close`.
+    """
+
+    __slots__ = ("events", "metrics", "path", "meta", "_t0_host", "_closed")
+
+    def __init__(self, path: Optional[str] = None, **meta):
+        self.events: List[dict] = []
+        self.metrics = Metrics()
+        self.path = path
+        self.meta = meta
+        self._t0_host = time.perf_counter()
+        self._closed = False
+
+    # -- emission ----------------------------------------------------------
+    def event(self, kind: str, **fields) -> None:
+        """Record one typed event (fields must be JSON-serializable)."""
+        fields["kind"] = kind
+        self.events.append(fields)
+
+    def raw(self, record: dict) -> None:
+        """Record a pre-built event dict (must carry ``kind``)."""
+        self.events.append(record)
+
+    def host_now(self) -> float:
+        return time.perf_counter() - self._t0_host
+
+    @contextlib.contextmanager
+    def span(self, kind: str, **fields):
+        """Host-time stage span: records begin + duration on exit."""
+        t0 = time.perf_counter()
+        try:
+            yield
+        finally:
+            fields["kind"] = kind
+            fields["t_host"] = t0 - self._t0_host
+            fields["dur_host"] = time.perf_counter() - t0
+            self.events.append(fields)
+
+    # -- output ------------------------------------------------------------
+    def records(self) -> List[dict]:
+        """Header + events + metrics snapshot — what :meth:`flush` writes,
+        and what :mod:`repro.obs.summary` consumes directly in-memory."""
+        header = {"kind": "header", "schema": SCHEMA_VERSION,
+                  "n_events": len(self.events)}
+        header.update(self.meta)
+        out = [header]
+        out.extend(self.events)
+        m = self.metrics.to_dict()
+        if m["counters"] or m["histograms"]:
+            out.append({"kind": "metrics", **m})
+        return out
+
+    def flush(self) -> Optional[str]:
+        """Write the JSONL file (no-op without a path); returns the path."""
+        if self.path is None:
+            return None
+        with open(self.path, "w") as f:
+            for rec in self.records():
+                f.write(json.dumps(rec, sort_keys=True,
+                                   allow_nan=False) + "\n")
+        return self.path
+
+    def close(self) -> Optional[str]:
+        if self._closed:
+            return self.path
+        self._closed = True
+        return self.flush()
+
+
+def active() -> Optional[Tracer]:
+    """The active tracer, or None (read once per round, not per event)."""
+    return TRACER
+
+
+def enable(path: Optional[str] = None, **meta) -> Tracer:
+    """Install a fresh tracer as the active one (stackable: ``disable``
+    restores whatever was active before)."""
+    global TRACER
+    t = Tracer(path, **meta)
+    _STACK.append(t)
+    TRACER = t
+    return t
+
+
+def disable() -> Optional[Tracer]:
+    """Close the active tracer (flushing to its path, if any) and restore
+    the previously active one.  Returns the closed tracer."""
+    global TRACER
+    if not _STACK:
+        return None
+    t = _STACK.pop()
+    t.close()
+    TRACER = _STACK[-1] if _STACK else None
+    return t
+
+
+@contextlib.contextmanager
+def tracing(path: Optional[str] = None, **meta):
+    """``with tracing("run.jsonl") as trc: ...`` — enable/flush scoped."""
+    t = enable(path, **meta)
+    try:
+        yield t
+    finally:
+        disable()
+
+
+def load(path: str) -> List[dict]:
+    """Read a JSONL trace file back into a record list."""
+    records = []
+    with open(path) as f:
+        for line in f:
+            line = line.strip()
+            if line:
+                records.append(json.loads(line))
+    return records

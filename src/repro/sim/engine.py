@@ -43,6 +43,7 @@ import numpy as np
 
 from ..constellation.links import LinkModel
 from ..constellation.orbits import GroundStation, Walker
+from ..obs.trace import active as _obs_active
 from .contacts import ContactPlan
 from .routing import Router
 
@@ -89,6 +90,33 @@ class Delivery:
     nbytes_attempted: float = 0.0  # bytes put on the air, retx included
     retries: int = 0               # ARQ rounds beyond the first
     delivered: bool = True         # all segments landed (False: lost/truncated)
+
+    def to_dict(self) -> dict:
+        """JSON-stable serialization (the tracer's delivery record).
+
+        Every field maps to a plain python scalar; the one NaN-able field
+        (``window``, NaN on records predating the window tagging) maps to
+        ``None`` so the output survives strict JSON round-trips
+        (:meth:`from_dict` restores the NaN)."""
+        w = self.window
+        return {"sat": int(self.sat), "t_done": float(self.t_done),
+                "t_start": float(self.t_start),
+                "gateway": int(self.gateway), "station": int(self.station),
+                "hops": int(self.hops), "nbytes": float(self.nbytes),
+                "window": float(w) if w == w else None,
+                "nbytes_attempted": float(self.nbytes_attempted),
+                "retries": int(self.retries),
+                "delivered": bool(self.delivered)}
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "Delivery":
+        w = d["window"]
+        return cls(sat=d["sat"], t_done=d["t_done"], t_start=d["t_start"],
+                   gateway=d["gateway"], station=d["station"],
+                   hops=d["hops"], nbytes=d["nbytes"],
+                   window=float("nan") if w is None else w,
+                   nbytes_attempted=d["nbytes_attempted"],
+                   retries=d["retries"], delivered=d["delivered"])
 
 
 @dataclasses.dataclass
@@ -146,6 +174,118 @@ class RoundResult:
         :class:`Cohort`)."""
         return group_cohorts(self.deliveries)
 
+    def to_dict(self) -> dict:
+        """JSON-stable serialization: masks as bool lists, deliveries via
+        :meth:`Delivery.to_dict` (round-trips through :meth:`from_dict`)."""
+        return {"mask": [bool(b) for b in self.mask],
+                "duration": float(self.duration),
+                "deliveries": [d.to_dict() for d in self.deliveries],
+                "scheduled": [bool(b) for b in self.scheduled],
+                "t0": float(self.t0)}
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "RoundResult":
+        return cls(mask=np.asarray(d["mask"], dtype=bool),
+                   duration=d["duration"],
+                   deliveries=[Delivery.from_dict(x)
+                               for x in d["deliveries"]],
+                   scheduled=np.asarray(d["scheduled"], dtype=bool),
+                   t0=d["t0"])
+
+
+# ---------------------------------------------------------------------------
+# trace emission (repro.obs)
+# ---------------------------------------------------------------------------
+# Emission happens HERE, in the run_round/run_async wrappers, after the
+# engine (fast batch core or heapq oracle) has produced its result: both
+# paths therefore emit the identical record schema from the identical
+# Delivery timeline, which is what lets `python -m repro.obs diff`
+# localize the first fast-vs-oracle divergence.  The hot event loops are
+# untouched — with no active tracer the only cost is one module
+# attribute read per round.
+
+def _emit_round_trace(trc, res: "RoundResult", engine: str, k: int) -> None:
+    """Emit one sync round's records (kinds: delivery/arq/cohort/round)
+    and bump the byte/latency metrics."""
+    mtr = trc.metrics
+    lat = mtr.histogram("delivery_latency")
+    air_c = mtr.counter("bytes_air")
+    retx_c = mtr.counter("bytes_retx")
+    dlv_c = mtr.counter("deliveries")
+    bytes_air = 0.0
+    n_lost = 0
+    for d in res.deliveries:
+        rec = d.to_dict()
+        rec["kind"] = "delivery"
+        rec["round"] = k
+        trc.raw(rec)
+        bytes_air += d.nbytes_attempted
+        n_lost += not d.delivered
+        air_c.add(d.nbytes_attempted, station=d.station)
+        retx_c.add(d.nbytes_attempted - d.nbytes)
+        dlv_c.add(1.0, status="ok" if d.delivered else "lost")
+        lat.observe(d.t_done - d.t_start)
+        if d.retries or not d.delivered:
+            w = d.window
+            trc.event("arq", round=k, sat=int(d.sat),
+                      gateway=int(d.gateway), station=int(d.station),
+                      window=float(w) if w == w else None,
+                      retries=int(d.retries), delivered=bool(d.delivered),
+                      nbytes_attempted=float(d.nbytes_attempted),
+                      t_done=float(d.t_done))
+    for c in res.cohorts():
+        w = c.window
+        trc.event("cohort", round=k, station=int(c.station),
+                  window=float(w) if w == w else None,
+                  n_sats=len(c.sats), t_first=float(c.t_first),
+                  t_last=float(c.t_last),
+                  nbytes=float(sum(d.nbytes for d in c.deliveries)))
+    if res.deliveries:
+        mtr.histogram("lost_frac").observe(n_lost / len(res.deliveries))
+    trc.event("round", round=k, t0=float(res.t0),
+              duration=float(res.duration),
+              n_scheduled=int(res.scheduled.sum()),
+              n_delivered=int(res.mask.sum()), n_lost=n_lost,
+              bytes_air=bytes_air, engine=engine)
+
+
+def _emit_async_trace(trc, deliveries: Sequence[Delivery], engine: str,
+                      run: int, t0: float, n_requested: int) -> None:
+    """Emit one async run's records: per-delivery (``round=None``,
+    tagged with the run index) plus a closing ``async_run`` summary."""
+    mtr = trc.metrics
+    lat = mtr.histogram("delivery_latency")
+    air_c = mtr.counter("bytes_air")
+    retx_c = mtr.counter("bytes_retx")
+    dlv_c = mtr.counter("deliveries")
+    bytes_air = 0.0
+    n_ok = 0
+    for d in deliveries:
+        rec = d.to_dict()
+        rec["kind"] = "delivery"
+        rec["round"] = None
+        rec["run"] = run
+        trc.raw(rec)
+        bytes_air += d.nbytes_attempted
+        n_ok += bool(d.delivered)
+        air_c.add(d.nbytes_attempted, station=d.station)
+        retx_c.add(d.nbytes_attempted - d.nbytes)
+        dlv_c.add(1.0, status="ok" if d.delivered else "lost")
+        lat.observe(d.t_done - d.t_start)
+        if d.retries or not d.delivered:
+            w = d.window
+            trc.event("arq", round=None, run=run, sat=int(d.sat),
+                      gateway=int(d.gateway), station=int(d.station),
+                      window=float(w) if w == w else None,
+                      retries=int(d.retries), delivered=bool(d.delivered),
+                      nbytes_attempted=float(d.nbytes_attempted),
+                      t_done=float(d.t_done))
+    t_end = max((d.t_done for d in deliveries), default=t0)
+    trc.event("async_run", run=run, t0=float(t0),
+              n_requested=int(n_requested), n_deliveries=len(deliveries),
+              n_ok=n_ok, n_lost=len(deliveries) - n_ok,
+              bytes_air=bytes_air, t_end=float(t_end), engine=engine)
+
 
 class Engine:
     """Event-queue simulator over a :class:`Scenario`.
@@ -178,6 +318,8 @@ class Engine:
         self.router = Router(scenario.walker, scenario.link)
         self._chan_cache = None
         self._fast = None
+        self._round_idx = 0       # trace round counter (repro.obs)
+        self._async_idx = 0       # trace async-run counter
         self._blocked: Optional[list] = None
         self._refresh_blocked()
         if policy is None:
@@ -240,6 +382,18 @@ class Engine:
                 b = b | (finite & (phase < blackout.duration))
             blocked.append(b)
         self._blocked = blocked
+        trc = _obs_active()
+        if trc is not None:
+            # outage summary per station: how much of the plan's window
+            # budget weather/conjunctions removed.  Re-emitted on every
+            # horizon extension (the mask is recomputed), so records carry
+            # the horizon to tell refreshes apart; not a DIFF kind.
+            for g, b in enumerate(blocked):
+                finite = np.isfinite(self.plan.rises[g])
+                trc.event("outage", station=g,
+                          horizon=float(self.plan.horizon),
+                          n_windows=int(finite.sum()),
+                          n_blocked=int((b & finite).sum()))
 
     def ensure(self, t_end: float) -> None:
         old = self.plan.horizon
@@ -321,8 +475,14 @@ class Engine:
         to the vectorized fast path unless ``fast=False``."""
         if self.fast:
             from .fastpath import run_round_fast
-            return run_round_fast(self, t0, msg_bytes)
-        return self._run_round_oracle(t0, msg_bytes)
+            res = run_round_fast(self, t0, msg_bytes)
+        else:
+            res = self._run_round_oracle(t0, msg_bytes)
+        k, self._round_idx = self._round_idx, self._round_idx + 1
+        trc = _obs_active()
+        if trc is not None:
+            _emit_round_trace(trc, res, "fast" if self.fast else "oracle", k)
+        return res
 
     def _run_round_oracle(self, t0: float, msg_bytes: float) -> RoundResult:
         sc = self.scenario
@@ -437,10 +597,17 @@ class Engine:
         """
         if self.fast:
             from .fastpath import run_async_fast
-            return run_async_fast(self, t0, msg_bytes, n_deliveries,
-                                  max_time=max_time)
-        return self._run_async_oracle(t0, msg_bytes, n_deliveries,
-                                      max_time=max_time)
+            out = run_async_fast(self, t0, msg_bytes, n_deliveries,
+                                 max_time=max_time)
+        else:
+            out = self._run_async_oracle(t0, msg_bytes, n_deliveries,
+                                         max_time=max_time)
+        run, self._async_idx = self._async_idx, self._async_idx + 1
+        trc = _obs_active()
+        if trc is not None:
+            _emit_async_trace(trc, out, "fast" if self.fast else "oracle",
+                              run, t0, n_deliveries)
+        return out
 
     def _run_async_oracle(self, t0: float, msg_bytes: float,
                           n_deliveries: int,

@@ -33,6 +33,15 @@ batched quantity is computed with the oracle's exact float expressions
 ``(t, push-sequence)`` total order.  ``tests/test_fastpath_equivalence``
 enforces this across sync/async × lossless/lossy/rain-fade/mega
 scenarios; CI runs the mega-1000 smoke on every push.
+
+Observability attaches at the :meth:`~repro.sim.engine.Engine.run_round`
+/ :meth:`~repro.sim.engine.Engine.run_async` wrappers — NOT here — so
+this path and the oracle emit ``repro.obs`` trace records through one
+shared schema and ``python -m repro.obs diff`` can localize the first
+diverging record between the two engines.  (One asymmetry: time-invariant
+channels here replay :class:`~repro.channel.arq.ArqPlan` without calling
+``ChannelModel.transmit``, so per-transmission ``link`` events only
+appear on budget channels; ``link`` is excluded from the diff kinds.)
 """
 from __future__ import annotations
 

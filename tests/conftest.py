@@ -26,6 +26,7 @@ SIMWIRE_MODULES = {
     "test_wire_codecs",
     "test_bench_harness",
     "test_channel",
+    "test_obs",
 }
 
 

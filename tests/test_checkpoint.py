@@ -1,10 +1,11 @@
-"""Checkpoint store: roundtrip + mismatch detection."""
+"""Checkpoint store: roundtrip, mismatch detection, and mid-training
+resume (coordinator model + EF residual restored bit-identically)."""
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.checkpoint.store import restore, save
+from repro.checkpoint.store import latest_step, restore, save
 
 
 def test_roundtrip(tmp_path):
@@ -26,3 +27,60 @@ def test_shape_mismatch_raises(tmp_path):
     save(path, {"a": jnp.zeros((2, 2))})
     with pytest.raises(ValueError, match="shape mismatch"):
         restore(path, {"a": jnp.zeros((3, 2))})
+
+
+# ---------------------------------------------------------------------------
+# mid-training resume (ISSUE 6 satellite): a FedLT run checkpointed after
+# 3 rounds and restored — full state incl. the uplink EF residual c_up and
+# the coordinator's received wire z_hat — must continue bit-identically
+# with the uninterrupted run
+# ---------------------------------------------------------------------------
+
+def _fedlt_problem(n_agents=12, dim=16):
+    from repro.core.compression import UniformQuantizer
+    from repro.core.error_feedback import EFChannel
+    from repro.core.fedlt import FedLT
+    from repro.data.logistic import generate, make_local_loss
+    data, _ = generate(jax.random.PRNGKey(0), n_agents=n_agents, m=40,
+                       dim=dim)
+    loss = make_local_loss(eps=50.0, n_agents=n_agents)
+    q = UniformQuantizer(levels=10, vmin=-1, vmax=1, clip=True)
+    alg = FedLT(loss=loss, n_epochs=2, gamma=0.005, rho=20.0,
+                uplink=EFChannel(q), downlink=EFChannel(q))
+    return alg, data, dim, n_agents
+
+
+def test_fedlt_resume_bit_identical(tmp_path):
+    alg, data, dim, n_agents = _fedlt_problem()
+    step = jax.jit(lambda s, k: alg.round(
+        s, data, jnp.ones((n_agents,), bool), k)[0])
+    keys = jax.random.split(jax.random.PRNGKey(1), 6)
+
+    state = alg.init(jnp.zeros((dim,)), n_agents)
+    for k in range(3):
+        state = step(state, keys[k])
+    path = str(tmp_path / "mid")
+    save(path, state, step=3)
+    assert latest_step(str(tmp_path)) == 3
+
+    # uninterrupted reference: 3 more rounds on the live state
+    ref = state
+    for k in range(3, 6):
+        ref = step(ref, keys[k])
+
+    # resumed run: restore into a FRESH init template, then same 3 rounds
+    resumed = restore(path, alg.init(jnp.zeros((dim,)), n_agents))
+    # the restore itself must already be bitwise (model, aux, EF caches,
+    # received wire — every field of FedLTState)
+    for a, b in zip(jax.tree_util.tree_leaves(state),
+                    jax.tree_util.tree_leaves(resumed)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    for k in range(3, 6):
+        resumed = step(resumed, keys[k])
+
+    for name, a, b in zip(ref._fields, ref, resumed):
+        for la, lb in zip(jax.tree_util.tree_leaves(a),
+                          jax.tree_util.tree_leaves(b)):
+            np.testing.assert_array_equal(
+                np.asarray(la), np.asarray(lb),
+                err_msg=f"field {name} diverged after resume")
