@@ -19,6 +19,16 @@ loss-robust EF arm strictly dominates the no-EF arm at every loss rate ≥
 rate equal the update-loss rate, so the sweep axis is directly
 interpretable.
 
+Every arm runs under a :mod:`repro.obs` trace and is folded into a run
+ledger (``results/ledger_lossy_ef.jsonl``); the printed table, the JSON
+dump, and the derived dominance metrics are rendered **exclusively from
+the ledger entries** (:func:`repro.obs.report.lossy_ef_rows`) — there is
+no separate in-memory reporting path, so what the ledger records is by
+construction what the table claims.  Cross-sweep comparisons come free:
+
+    PYTHONPATH=src python -m repro.obs report --ledger \
+        results/ledger_lossy_ef.jsonl --frontier
+
 Run:  PYTHONPATH=src python -m benchmarks.table_lossy_ef [--quick]
 """
 from __future__ import annotations
@@ -37,6 +47,9 @@ from repro.core.error_feedback import EFChannel
 from repro.core.fedlt import FedLT, optimality_error
 from repro.core.fedlt_sat import SpaceRunner
 from repro.data.logistic import generate, make_local_loss, solve_global
+from repro.obs import tracing
+from repro.obs.ledger import ingest, load_ledger
+from repro.obs.report import lossy_ef_rows
 from repro.sim import Engine, get_scenario
 
 from .common import RESULTS_DIR, TUNED
@@ -47,9 +60,18 @@ ARMS = [
     ("no EF", False, False),
 ]
 
+LEDGER = os.path.join(RESULTS_DIR, "ledger_lossy_ef.jsonl")
+
+
+def render_row(row: dict) -> str:
+    return (f"p={row['loss_rate']:4.2f}  {row['arm']:18s} "
+            f"e_K={row['error']:.5f}  "
+            f"lost={row['lost']:5d}/{row['lost'] + row['received']}  "
+            f"up={row['bytes_up'] / 1e3:7.1f}kB")
+
 
 def run(loss_rates, rounds=1500, n_agents=100, dim=100, m=100, seed=0,
-        verbose=True):
+        verbose=True, ledger_path=LEDGER):
     data, _ = generate(jax.random.PRNGKey(seed), n_agents=n_agents, m=m,
                        dim=dim)
     loss = make_local_loss(eps=50.0, n_agents=n_agents)
@@ -57,13 +79,13 @@ def run(loss_rates, rounds=1500, n_agents=100, dim=100, m=100, seed=0,
     C = UniformQuantizer(levels=10, vmin=-1, vmax=1, clip=True)
     err = lambda s: float(optimality_error(s.x, x_star))  # noqa: E731
 
-    rows = []
     # ONE engine for the whole sweep: rounds are pure functions of
     # (scenario, seed, t0), so arms can't contaminate each other, while
     # the contact plan builds once and the fast path's cached ARQ plans
     # (keyed by the installed channel's identity) amortize across the
     # 1500-round runs instead of being re-derived per (p, arm)
     engine = Engine(get_scenario("walker-kiruna"))
+    run_ids = []
     for p in loss_rates:
         # one segment per update + no retransmission → the segment-loss
         # rate IS the update-loss rate (the sweep axis)
@@ -75,20 +97,23 @@ def run(loss_rates, rounds=1500, n_agents=100, dim=100, m=100, seed=0,
             st = alg.init(jnp.zeros((dim,)), n_agents)
             runner = SpaceRunner(engine, compressor=C, channel=ch,
                                  loss_robust=robust)
-            st, logs = runner.run(alg, st, data, rounds,
-                                  jax.random.PRNGKey(100 + seed),
-                                  error_fn=err, log_every=rounds)
-            row = dict(loss_rate=p, arm=arm,
-                       error=logs[-1].error,
-                       lost=sum(l.n_lost for l in logs),
-                       received=sum(l.n_active for l in logs),
-                       bytes_up=logs[-1].bytes_up)
-            rows.append(row)
-            if verbose:
-                print(f"p={p:4.2f}  {arm:18s} e_K={row['error']:.5f}  "
-                      f"lost={row['lost']:5d}/"
-                      f"{row['lost'] + row['received']}  "
-                      f"up={row['bytes_up'] / 1e3:7.1f}kB")
+            with tracing(scenario="walker-kiruna", algorithm="FedLT",
+                         compressor="quant10", channel=f"flat-{p}",
+                         arm=arm, loss_rate=p, rounds=rounds,
+                         seed=seed) as trc:
+                runner.run(alg, st, data, rounds,
+                           jax.random.PRNGKey(100 + seed),
+                           error_fn=err, log_every=rounds)
+                records = trc.records()
+            entry, _ = ingest(records, ledger_path)
+            run_ids.append(entry["run_id"])
+    # ---- reporting: exclusively from the ledger -------------------------
+    by_id = {e["run_id"]: e for e in load_ledger(ledger_path)}
+    entries = [by_id[r] for r in run_ids]     # sweep order
+    rows = lossy_ef_rows(entries)
+    if verbose:
+        for row in rows:
+            print(render_row(row))
     os.makedirs(RESULTS_DIR, exist_ok=True)
     with open(os.path.join(RESULTS_DIR, "table_lossy_ef.json"), "w") as f:
         json.dump(rows, f, indent=2)
@@ -100,7 +125,7 @@ def main(quick=False):
     loss_rates = [0.0, 0.1, 0.2] if quick else [0.0, 0.05, 0.1, 0.2, 0.3]
     rows = run(loss_rates, rounds=500 if quick else 1500)
     # derived metric: does loss-robust EF strictly dominate no-EF at every
-    # loss rate >= 10%?
+    # loss rate >= 10%?  (rows come from the ledger, see run())
     by = {(r["loss_rate"], r["arm"]): r["error"] for r in rows}
     high = [p for p in loss_rates if p >= 0.1]
     dominates = all(by[(p, "EF (loss-robust)")] < by[(p, "no EF")]

@@ -50,6 +50,14 @@ def emit_trace(directory: str) -> str:
             t += eng.run_round(t, msg).duration
         eng.run_async(0.0, msg, n_deliveries=50)
     print(f"wrote {path}")
+    # fold the trace into the run ledger artifact next to the BENCH
+    # files — every perf-gate run leaves a cross-run-comparable entry
+    # behind, not just the raw timeline
+    from repro.obs.ledger import ingest
+    ledger = os.path.join(directory, "ledger.jsonl")
+    entry, added = ingest(path, ledger)
+    print(f"{'ingested into' if added else 'already present in'} "
+          f"{ledger} as {entry['run_id']}")
     return path
 
 

@@ -39,6 +39,24 @@ from ..kernels.pack_bits import _TILE_VALS, pack_bits, unpack_bits
 from ..models.transformer import init_params, lm_loss
 
 
+def emit_round_series(step: int, metrics: dict) -> None:
+    """Fold one ``round_step`` metrics dict into the active trace as
+    per-round series samples (no-op when tracing is off).
+
+    Host-side by design: the lowered step stays pure, and the float()
+    materialization of the loss only happens when a tracer is installed
+    — callers that already print the loss pay nothing extra.
+    """
+    from ..obs.trace import active as _obs_active
+    trc = _obs_active()
+    if trc is None:
+        return
+    trc.series("loss", step, float(metrics["loss"]))
+    nb = metrics.get("wire_nbytes_per_agent")
+    if nb is not None:
+        trc.series("wire_nbytes_per_agent", step, float(nb))
+
+
 class DeployState(NamedTuple):
     x: object        # (A, …) per-agent models
     z: object        # (A, …) auxiliaries

@@ -248,6 +248,7 @@ class SpaceRunner:
                               absorb=bool(absorb),
                               resid_norm=float(np.sqrt(norm2)))
                     trc.metrics.counter("ef_reverts").add(float(lost.sum()))
+                    trc.series("ef_resid_norm", k, float(np.sqrt(norm2)))
             state = state_new
             t += res.duration
             # bytes_up = what actually crossed the GS links this round —
@@ -271,14 +272,22 @@ class SpaceRunner:
                 # downlink ledger: the coordinator rebroadcasts the model
                 # to every satellite it scheduled (not modeled by the
                 # engine's uplink timeline, so accounted here)
-                trc.metrics.counter("bytes_down").add(
-                    msg * float(res.scheduled.sum()))
+                down = trc.metrics.counter("bytes_down")
+                down.add(msg * float(res.scheduled.sum()))
                 trc.event("fl_round", round=k, t0=float(t_round0),
                           t=float(t), bytes_up=float(up_bytes),
                           n_active=int(delivered.sum()),
                           n_lost=int(lost.sum()),
                           error=err if err == err else None,
                           mode="sync")
+                # first-class convergence/byte curves for the run ledger
+                trc.series("bytes_up", k, up_bytes)
+                trc.series("bytes_down", k, down.total)
+                n_att = int(attempted.sum())
+                trc.series("lost_frac", k,
+                           float(lost.sum()) / n_att if n_att else 0.0)
+                if err is not None and err == err:
+                    trc.series("e_K", k, err)
         return state, logs
 
     # -- buffered-async (FedBuff-style) -------------------------------------
@@ -343,17 +352,26 @@ class SpaceRunner:
             logs.append(RoundLog(k, t, up_bytes, int(active_np.sum()), err,
                                  staleness=mean_stale))
             if trc is not None:
-                hist = trc.metrics.histogram("staleness")
+                hist = trc.metrics.histogram("staleness", lo=0.0)
                 for d in chunk:
                     hist.observe(float(stale[d.sat]))
-                trc.metrics.counter("bytes_down").add(
-                    msg * float(active_np.sum()))
+                down = trc.metrics.counter("bytes_down")
+                down.add(msg * float(active_np.sum()))
                 trc.event("fl_round", round=k, t0=float(t0_agg),
                           t=float(t), bytes_up=float(up_bytes),
                           n_active=int(active_np.sum()),
                           n_lost=n_lost_win, staleness=mean_stale,
                           error=err if err == err else None,
                           mode="async")
+                # first-class convergence/byte curves for the run ledger
+                trc.series("bytes_up", k, up_bytes)
+                trc.series("bytes_down", k, down.total)
+                trc.series("staleness", k, mean_stale)
+                n_win = len(chunk) + n_lost_win
+                trc.series("lost_frac", k,
+                           n_lost_win / n_win if n_win else 0.0)
+                if err is not None and err == err:
+                    trc.series("e_K", k, err)
         return state, logs
 
 

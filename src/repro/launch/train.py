@@ -13,15 +13,17 @@ config is used and the mesh must be able to hold it (dry-run-verified).
 from __future__ import annotations
 
 import argparse
+import contextlib
 import os
 import time
 
 import jax
 import jax.numpy as jnp
 
+from .. import obs
 from ..checkpoint.store import save
 from ..configs import ARCHS, smoke_variant
-from ..core.deploy import DeployFedLT
+from ..core.deploy import DeployFedLT, emit_round_series
 from ..data.synthetic import make_batch
 
 
@@ -39,6 +41,12 @@ def main():
     ap.add_argument("--no-compress", action="store_true")
     ap.add_argument("--checkpoint-dir", default=None)
     ap.add_argument("--checkpoint-every", type=int, default=50)
+    ap.add_argument("--trace", default=None, metavar="PATH",
+                    help="stream a repro.obs trace here (.jsonl / "
+                         ".jsonl.gz); tail it live with "
+                         "`python -m repro.obs watch PATH`")
+    ap.add_argument("--ledger", default=None, metavar="PATH",
+                    help="fold the finished trace into this run ledger")
     args = ap.parse_args()
 
     cfg = ARCHS[args.arch]
@@ -52,20 +60,33 @@ def main():
 
     step = jax.jit(lambda s, b: alg.round_step(s, b))
 
-    for k in range(args.rounds):
-        keys = [jax.random.fold_in(jax.random.PRNGKey(11 + i), k)
-                for i in range(args.agents)]
-        per = [make_batch(cfg, kk, args.batch, args.seq) for kk in keys]
-        batch = jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *per)
-        t0 = time.time()
-        state, metrics = step(state, batch)
-        print(f"round {k:5d}  loss={float(metrics['loss']):.4f}  "
-              f"({time.time()-t0:.1f}s)")
-        if (args.checkpoint_dir and
-                ((k + 1) % args.checkpoint_every == 0 or k == args.rounds - 1)):
-            path = os.path.join(args.checkpoint_dir, f"round_{k + 1:06d}")
-            save(path, state.y_hat, step=k + 1)
-            print(f"  checkpoint → {path}.npz")
+    trace_ctx = (obs.tracing(args.trace, stream_every=64,
+                             scenario=cfg.name, algorithm="DeployFedLT",
+                             mode="deploy", n_agents=args.agents)
+                 if args.trace else contextlib.nullcontext())
+    with trace_ctx:
+        for k in range(args.rounds):
+            keys = [jax.random.fold_in(jax.random.PRNGKey(11 + i), k)
+                    for i in range(args.agents)]
+            per = [make_batch(cfg, kk, args.batch, args.seq) for kk in keys]
+            batch = jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *per)
+            t0 = time.time()
+            state, metrics = step(state, batch)
+            emit_round_series(k, metrics)
+            print(f"round {k:5d}  loss={float(metrics['loss']):.4f}  "
+                  f"({time.time()-t0:.1f}s)")
+            if (args.checkpoint_dir and
+                    ((k + 1) % args.checkpoint_every == 0
+                     or k == args.rounds - 1)):
+                path = os.path.join(args.checkpoint_dir,
+                                    f"round_{k + 1:06d}")
+                save(path, state.y_hat, step=k + 1)
+                print(f"  checkpoint → {path}.npz")
+    if args.trace and args.ledger:
+        from ..obs.ledger import ingest
+        entry, added = ingest(args.trace, args.ledger)
+        print(f"ledger: {entry['run_id']}"
+              + ("" if added else " (already present)"))
 
 
 if __name__ == "__main__":

@@ -18,33 +18,54 @@ Three layers:
 * :mod:`repro.obs.metrics` — counters/histograms (bytes per link,
   retransmitted bytes, delivery latency, staleness, lost fraction)
   snapshotted into every trace;
-* :mod:`repro.obs.summary` / :mod:`repro.obs.chrome` — summarize, diff
-  (localize the first fast-vs-oracle divergence), check invariants
-  (bytes conservation — the CI smoke), and export Chrome/Perfetto
-  traces.
+* :mod:`repro.obs.summary` / :mod:`repro.obs.chrome` — summarize
+  (human table or ``--json`` machine form), diff (localize the first
+  fast-vs-oracle divergence), check invariants (bytes conservation —
+  the CI smoke), and export Chrome/Perfetto traces;
+* :mod:`repro.obs.ledger` / :mod:`repro.obs.report` — cross-run
+  experiment tracking: every run's per-round ``series`` curves (e_K,
+  bytes_up/down/air, EF-residual norm, staleness, lost fraction) fold
+  into an append-only run ledger keyed by content-hash run ids; the
+  report renders cross-run tables and the bytes-to-ground vs e_K
+  frontier, ``watch`` tails a live trace (reader-side only), and
+  ``convgate`` gates fresh convergence curves against the committed
+  ``CONV_reference.json`` in CI.
 
 Quickstart::
 
     from repro import obs
     with obs.tracing("run.jsonl", scenario="mega-1000"):
         runner.run(alg, state, data, n_rounds=50, key=key)
-    # then:  python -m repro.obs summarize run.jsonl
+    # then:  python -m repro.obs summarize run.jsonl [--json]
+    #        python -m repro.obs ingest run.jsonl --ledger runs/ledger.jsonl
+    #        python -m repro.obs report --ledger runs/ledger.jsonl
+    #        python -m repro.obs watch run.jsonl --total 50   # live runs
+    #        python -m repro.obs convgate                     # CI gate
     #        python -m repro.obs diff fast.jsonl oracle.jsonl
     #        python -m repro.obs check run.jsonl
     #        python -m repro.obs chrome run.jsonl -o run.perfetto.json
+
+Paths ending in ``.gz`` read and write gzip-compressed; long runs can
+stream with bounded memory (``obs.tracing(path, stream_every=N)``).
 
 Disabled (the default) the only cost anywhere in the stack is a module
 attribute read per round / per kernel dispatch — enforced by the gated
 ``sim.trace_overhead`` benchmark (<5% enabled, parity disabled).
 """
 from .chrome import chrome_trace, write_chrome_trace
+from .ledger import ingest, load_ledger
 from .metrics import Counter, Histogram, Metrics
-from .summary import check, diff, render_rounds, summarize
+from .report import convgate, render_frontier, render_report, watch
+from .summary import (check, diff, extract_series, render_rounds,
+                      summarize, summarize_dict)
 from .trace import (Tracer, active, disable, enable, load, tracing)
 
 __all__ = [
     "Tracer", "active", "enable", "disable", "tracing", "load",
     "Metrics", "Counter", "Histogram",
-    "summarize", "render_rounds", "diff", "check",
+    "summarize", "summarize_dict", "extract_series", "render_rounds",
+    "diff", "check",
+    "ingest", "load_ledger", "render_report", "render_frontier",
+    "watch", "convgate",
     "chrome_trace", "write_chrome_trace",
 ]

@@ -1,25 +1,46 @@
-"""CLI: summarize, diff, check, and export obs traces.
+"""CLI: summarize, diff, check, export, and cross-run-track obs traces.
 
-    python -m repro.obs summarize TRACE.jsonl
+    python -m repro.obs summarize TRACE.jsonl [--json]
     python -m repro.obs diff FAST.jsonl ORACLE.jsonl [--kinds delivery round]
     python -m repro.obs check TRACE.jsonl [MORE.jsonl ...]
     python -m repro.obs chrome TRACE.jsonl -o TRACE.perfetto.json
+    python -m repro.obs ingest TRACE.jsonl [--ledger runs/ledger.jsonl]
+    python -m repro.obs report [--ledger runs/ledger.jsonl] [--frontier]
+    python -m repro.obs watch TRACE.jsonl [--total N] [--max-wait S]
+    python -m repro.obs convgate [--reference CONV_reference.json]
     python -m repro.obs --check TRACE.jsonl          # alias for `check`
 
-``diff`` exits 1 on the first divergence (printing the record index and
-field delta), ``check`` exits 1 on any violated invariant — both are CI
-primitives: the perf gate runs ``check`` on the trace the bench harness
-emits next to BENCH_*.json (bytes conservation), and equivalence tests
-run ``diff`` over fast-vs-oracle traces.
+All subcommands read ``.gz`` traces transparently.  ``diff`` exits 1 on
+the first divergence (printing the record index and field delta),
+``check`` exits 1 on any violated invariant, ``convgate`` exits 1 when a
+fresh convergence curve degrades past the committed reference tolerance
+(naming the scenario, round, and metric) — all three are CI primitives:
+the perf gate runs ``check`` on the emitted mega-1000 trace, ``ingest``s
+it into the uploaded ledger artifact, and runs ``convgate`` against
+``CONV_reference.json``.
 """
 from __future__ import annotations
 
 import argparse
+import json
 import sys
 
 from .chrome import write_chrome_trace
-from .summary import DIFF_KINDS, check, diff, summarize
+from .ledger import DEFAULT_LEDGER, ingest, load_ledger
+from .report import (REFERENCE_PATH, convgate, render_frontier,
+                     render_report, update_reference, watch)
+from .summary import DIFF_KINDS, check, diff, summarize, summarize_dict
 from .trace import load
+
+
+def _parse_meta(pairs) -> dict:
+    out = {}
+    for p in pairs or ():
+        if "=" not in p:
+            raise SystemExit(f"--meta wants key=value, got {p!r}")
+        k, v = p.split("=", 1)
+        out[k] = v
+    return out
 
 
 def main(argv=None) -> int:
@@ -32,6 +53,9 @@ def main(argv=None) -> int:
 
     p = sub.add_parser("summarize", help="per-round summary table")
     p.add_argument("trace")
+    p.add_argument("--json", action="store_true",
+                   help="machine-readable summary (what ingest/report "
+                        "consume) instead of the table")
 
     p = sub.add_parser("diff", help="localize the first divergence "
                                     "between two traces")
@@ -51,10 +75,57 @@ def main(argv=None) -> int:
     p.add_argument("-o", "--out", default=None,
                    help="output path (default: <trace>.perfetto.json)")
 
+    p = sub.add_parser("ingest", help="fold traces into the run ledger")
+    p.add_argument("traces", nargs="+")
+    p.add_argument("--ledger", default=DEFAULT_LEDGER)
+    p.add_argument("--sha", default=None,
+                   help="git sha override (default: REPRO_GIT_SHA env "
+                        "or `git rev-parse --short HEAD`)")
+    p.add_argument("--meta", nargs="*", default=None, metavar="K=V",
+                   help="header-meta overrides, e.g. scenario=mega-1000")
+
+    p = sub.add_parser("report", help="cross-run comparison table + "
+                                      "bytes-vs-e_K frontier")
+    p.add_argument("--ledger", default=DEFAULT_LEDGER)
+    p.add_argument("--frontier", action="store_true",
+                   help="only the bytes-to-ground vs e_K frontier")
+
+    p = sub.add_parser("watch", help="tail a live trace (per-round "
+                                     "table, rate, ETA)")
+    p.add_argument("trace")
+    p.add_argument("--total", type=int, default=None,
+                   help="expected total rounds (enables ETA)")
+    p.add_argument("--interval", type=float, default=0.5)
+    p.add_argument("--max-wait", type=float, default=None,
+                   help="stop after this many idle seconds")
+    p.add_argument("--no-follow", action="store_true",
+                   help="one pass over what exists now, then exit")
+
+    p = sub.add_parser("convgate", help="CI convergence gate vs the "
+                                        "committed reference curves")
+    p.add_argument("traces", nargs="*",
+                   help="existing traces to gate (default: run the "
+                        "canonical scenarios fresh)")
+    p.add_argument("--reference", default=REFERENCE_PATH)
+    p.add_argument("--scenario", default=None,
+                   help="canonical scenario name for the given traces "
+                        "(default: from each trace's header meta)")
+    p.add_argument("--ledger", default=None,
+                   help="also ingest fresh canonical runs here")
+    p.add_argument("--tol", type=float, default=None)
+    p.add_argument("--tol-bytes", type=float, default=None)
+    p.add_argument("--update", action="store_true",
+                   help="re-run the canonical scenarios and REWRITE the "
+                        "reference file instead of gating")
+
     args = ap.parse_args(argv)
 
     if args.cmd == "summarize":
-        print(summarize(load(args.trace)))
+        records = load(args.trace)
+        if args.json:
+            print(json.dumps(summarize_dict(records), sort_keys=True))
+        else:
+            print(summarize(records))
         return 0
     if args.cmd == "diff":
         equal, report = diff(load(args.trace_a), load(args.trace_b),
@@ -78,6 +149,37 @@ def main(argv=None) -> int:
         write_chrome_trace(load(args.trace), out)
         print(f"wrote {out} — open in https://ui.perfetto.dev")
         return 0
+    if args.cmd == "ingest":
+        meta = _parse_meta(args.meta)
+        for path in args.traces:
+            entry, added = ingest(path, args.ledger, sha=args.sha, **meta)
+            print(f"{path}: {'ingested' if added else 'already present'} "
+                  f"as {entry['run_id']} "
+                  f"(scenario={entry['scenario']}, "
+                  f"e_K={entry['final'].get('e_K')})")
+        return 0
+    if args.cmd == "report":
+        entries = load_ledger(args.ledger)
+        if args.frontier:
+            print(render_frontier(entries))
+        else:
+            print(render_report(entries))
+            print()
+            print("bytes-to-ground vs e_K frontier (* = Pareto):")
+            print(render_frontier(entries))
+        return 0
+    if args.cmd == "watch":
+        return watch(args.trace, total=args.total, interval=args.interval,
+                     follow=not args.no_follow, max_wait=args.max_wait)
+    if args.cmd == "convgate":
+        if args.update:
+            doc = update_reference(args.reference)
+            print(f"wrote {args.reference}: "
+                  f"{sorted(doc['scenarios'])} (tol={doc['tol']})")
+            return 0
+        return convgate(args.reference, traces=args.traces or None,
+                        scenario=args.scenario, ledger_path=args.ledger,
+                        tol=args.tol, tol_bytes=args.tol_bytes)
     return 2
 
 

@@ -53,31 +53,51 @@ class Counter:
 
 
 class Histogram:
-    """Fixed-bound histogram with count/sum/min/max sidecar stats."""
+    """Fixed-bound histogram with count/sum/min/max sidecar stats.
 
-    __slots__ = ("bounds", "counts", "count", "sum", "min", "max")
+    Out-of-range samples are never silently dropped: values above the
+    last bound land in the overflow bucket (``counts[-1]``, surfaced as
+    an explicit ``overflow`` count in the snapshot), and — with an
+    optional lower bound ``lo`` — values below it are tallied as
+    ``underflow`` instead of distorting the first bucket.  Under- and
+    overflowing samples still contribute to count/sum/min/max, so the
+    sidecar stats always describe every observation.
+    """
 
-    def __init__(self, bounds: Optional[Sequence[float]] = None):
+    __slots__ = ("bounds", "lo", "counts", "underflow", "count", "sum",
+                 "min", "max")
+
+    def __init__(self, bounds: Optional[Sequence[float]] = None,
+                 lo: Optional[float] = None):
         self.bounds = tuple(bounds) if bounds is not None else DEFAULT_BOUNDS
+        self.lo = lo
         self.counts = [0] * (len(self.bounds) + 1)   # +1: overflow bucket
+        self.underflow = 0
         self.count = 0
         self.sum = 0.0
         self.min = math.inf
         self.max = -math.inf
 
     def observe(self, value: float) -> None:
-        i = 0
-        for b in self.bounds:
-            if value <= b:
-                break
-            i += 1
-        self.counts[i] += 1
+        if self.lo is not None and value < self.lo:
+            self.underflow += 1
+        else:
+            i = 0
+            for b in self.bounds:
+                if value <= b:
+                    break
+                i += 1
+            self.counts[i] += 1
         self.count += 1
         self.sum += value
         if value < self.min:
             self.min = value
         if value > self.max:
             self.max = value
+
+    @property
+    def overflow(self) -> int:
+        return self.counts[-1]
 
     @property
     def mean(self) -> float:
@@ -87,7 +107,9 @@ class Histogram:
         return {"count": self.count, "sum": self.sum, "mean": self.mean,
                 "min": self.min if self.count else None,
                 "max": self.max if self.count else None,
-                "bounds": list(self.bounds), "counts": list(self.counts)}
+                "bounds": list(self.bounds), "counts": list(self.counts),
+                "lo": self.lo, "underflow": self.underflow,
+                "overflow": self.overflow}
 
 
 class Metrics:
@@ -106,10 +128,11 @@ class Metrics:
         return c
 
     def histogram(self, name: str,
-                  bounds: Optional[Sequence[float]] = None) -> Histogram:
+                  bounds: Optional[Sequence[float]] = None,
+                  lo: Optional[float] = None) -> Histogram:
         h = self.histograms.get(name)
         if h is None:
-            h = self.histograms[name] = Histogram(bounds)
+            h = self.histograms[name] = Histogram(bounds, lo=lo)
         return h
 
     def to_dict(self) -> dict:

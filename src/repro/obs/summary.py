@@ -2,7 +2,10 @@
 
 * :func:`summarize` — per-round table (engine rounds or federated
   ``fl_round`` records, whichever the trace carries) plus delivery and
-  metrics totals;
+  metrics totals; :func:`summarize_dict` is the machine-readable
+  counterpart (``repro.obs summarize --json``) that the ledger ingest
+  and the report renderer build on, so scripts never screen-scrape the
+  rendered table;
 * :func:`diff` — ordered comparison of the deterministic sim-schema
   events of two traces; localizes the FIRST diverging record, replacing
   the hand-diffing of Delivery lists that fast-vs-oracle equivalence
@@ -16,7 +19,7 @@ All three operate on record lists (``trace.load(path)`` or
 from __future__ import annotations
 
 import math
-from typing import Iterable, List, Optional, Sequence, Tuple
+from typing import Dict, Iterable, List, Optional, Sequence, Tuple
 
 from .trace import HOST_FIELDS
 
@@ -46,38 +49,144 @@ def _fmt(v, width: int, prec: int = 1) -> str:
     return f"{v:{width}d}"
 
 
+FL_HEADER = (f"{'round':>5s} {'t_sim':>10s} {'bytes_up':>12s} "
+             f"{'active':>6s} {'lost':>5s} {'stale':>6s} "
+             f"{'error':>12s}")
+ENG_HEADER = (f"{'round':>5s} {'t0':>10s} {'duration':>10s} "
+              f"{'sched':>6s} {'deliv':>6s} {'lost':>5s} "
+              f"{'bytes_air':>12s} {'engine':>7s}")
+
+
+def fl_row(r: dict) -> str:
+    """One ``fl_round`` record as a table row (shared with ``watch``)."""
+    err = r.get("error")
+    return (f"{r['round']:5d} {_fmt(r.get('t'), 10)} "
+            f"{_fmt(r.get('bytes_up'), 12, 0)} "
+            f"{_fmt(r.get('n_active'), 6)} {_fmt(r.get('n_lost', 0), 5)} "
+            f"{_fmt(r.get('staleness'), 6, 2)} "
+            + (f"{err:12.6f}" if err is not None else f"{'—':>12s}"))
+
+
+def eng_row(r: dict) -> str:
+    """One engine ``round`` record as a table row (shared with ``watch``)."""
+    return (f"{r['round']:5d} {r['t0']:10.1f} {r['duration']:10.1f} "
+            f"{r['n_scheduled']:6d} {r['n_delivered']:6d} "
+            f"{r['n_lost']:5d} {r['bytes_air']:12.0f} "
+            f"{r.get('engine', '?'):>7s}")
+
+
 def render_rounds(records: Sequence[dict]) -> str:
     """Per-round summary table: federated ``fl_round`` records when the
     trace has them (bytes/error/staleness), engine ``round`` records
     otherwise."""
     fl = of_kind(records, "fl_round")
-    lines: List[str] = []
     if fl:
-        lines.append(f"{'round':>5s} {'t_sim':>10s} {'bytes_up':>12s} "
-                     f"{'active':>6s} {'lost':>5s} {'stale':>6s} "
-                     f"{'error':>12s}")
-        for r in fl:
-            err = r.get("error")
-            lines.append(
-                f"{r['round']:5d} {_fmt(r.get('t'), 10)} "
-                f"{_fmt(r.get('bytes_up'), 12, 0)} "
-                f"{_fmt(r.get('n_active'), 6)} {_fmt(r.get('n_lost', 0), 5)} "
-                f"{_fmt(r.get('staleness'), 6, 2)} "
-                + (f"{err:12.6f}" if err is not None else f"{'—':>12s}"))
-        return "\n".join(lines)
+        return "\n".join([FL_HEADER] + [fl_row(r) for r in fl])
     rounds = of_kind(records, "round")
     if not rounds:
         return "(no round records in trace)"
-    lines.append(f"{'round':>5s} {'t0':>10s} {'duration':>10s} "
-                 f"{'sched':>6s} {'deliv':>6s} {'lost':>5s} "
-                 f"{'bytes_air':>12s} {'engine':>7s}")
-    for r in rounds:
-        lines.append(
-            f"{r['round']:5d} {r['t0']:10.1f} {r['duration']:10.1f} "
-            f"{r['n_scheduled']:6d} {r['n_delivered']:6d} "
-            f"{r['n_lost']:5d} {r['bytes_air']:12.0f} "
-            f"{r.get('engine', '?'):>7s}")
-    return "\n".join(lines)
+    return "\n".join([ENG_HEADER] + [eng_row(r) for r in rounds])
+
+
+# ---------------------------------------------------------------------------
+# series extraction (schema v2) + machine-readable summary
+# ---------------------------------------------------------------------------
+
+def extract_series(records: Sequence[dict]) -> Dict[str, dict]:
+    """Group ``series`` records into ``{name: {"steps": [...],
+    "values": [...]}}`` curves, step-ordered.
+
+    Schema-v1 traces predate the ``series`` kind; for those the
+    federated curves are synthesized from the ``fl_round`` records
+    (``e_K`` from non-null errors, ``bytes_up``, ``staleness``), so the
+    ledger and the convergence gate read old and new traces alike.
+    """
+    out: Dict[str, dict] = {}
+    for r in records:
+        if r.get("kind") != "series":
+            continue
+        s = out.setdefault(r["name"], {"steps": [], "values": []})
+        s["steps"].append(r["step"])
+        s["values"].append(r["value"])
+    if not out:      # v1 fallback: derive the federated curves
+        for r in of_kind(records, "fl_round"):
+            for name, val in (("e_K", r.get("error")),
+                              ("bytes_up", r.get("bytes_up")),
+                              ("staleness", r.get("staleness"))):
+                if val is None:
+                    continue
+                s = out.setdefault(name, {"steps": [], "values": []})
+                s["steps"].append(r["round"])
+                s["values"].append(val)
+    for s in out.values():
+        order = sorted(range(len(s["steps"])), key=s["steps"].__getitem__)
+        s["steps"] = [s["steps"][i] for i in order]
+        s["values"] = [s["values"][i] for i in order]
+    return out
+
+
+def summarize_dict(records: Sequence[dict]) -> dict:
+    """Machine-readable trace summary (``repro.obs summarize --json``).
+
+    The single structured view of a trace: header meta, per-round
+    records, delivery/async totals, extracted series curves, and the
+    metrics snapshot.  :mod:`repro.obs.ledger` ingests exactly this
+    (plus a run id), and :mod:`repro.obs.report` renders from it — no
+    screen-scraping of the human table anywhere.
+    """
+    header = records[0] if records and records[0].get("kind") == "header" \
+        else {}
+    meta = {k: v for k, v in header.items()
+            if k not in ("kind", "schema", "n_events", "streamed")}
+    fl = of_kind(records, "fl_round")
+    eng = of_kind(records, "round")
+    rounds = fl or eng
+    deliveries = of_kind(records, "delivery")
+    out = {
+        "schema": header.get("schema"),
+        "meta": meta,
+        "round_kind": "fl_round" if fl else ("round" if eng else None),
+        "n_rounds": len(rounds),
+        "rounds": [dict(r) for r in rounds],
+        "series": extract_series(records),
+        "async_runs": [dict(r) for r in of_kind(records, "async_run")],
+        "counters": {}, "histograms": {},
+    }
+    if deliveries:
+        lat = [d["t_done"] - d["t_start"] for d in deliveries]
+        out["deliveries"] = {
+            "n": len(deliveries),
+            "lost": sum(not d["delivered"] for d in deliveries),
+            "retx_rounds": sum(d["retries"] for d in deliveries),
+            "bytes_air": sum(d["nbytes_attempted"] for d in deliveries),
+            "latency_min": min(lat), "latency_max": max(lat),
+            "latency_mean": sum(lat) / len(lat),
+        }
+    else:
+        out["deliveries"] = None
+    for r in records:
+        if r.get("kind") == "metrics":
+            out["counters"] = r.get("counters", {})
+            out["histograms"] = r.get("histograms", {})
+    # final-state convenience block: what the run ledger keys on
+    final: dict = {"rounds": len(rounds)}
+    if fl:
+        last = fl[-1]
+        errs = [r["error"] for r in fl if r.get("error") is not None]
+        final.update(
+            e_K=errs[-1] if errs else None,
+            bytes_up=last.get("bytes_up"),
+            t=last.get("t"),
+            n_lost=sum(r.get("n_lost", 0) or 0 for r in fl),
+            n_active=sum(r.get("n_active", 0) or 0 for r in fl),
+            mode=last.get("mode"))
+    elif eng:
+        final.update(
+            bytes_air=sum(r["bytes_air"] for r in eng),
+            n_delivered=sum(r["n_delivered"] for r in eng),
+            n_lost=sum(r["n_lost"] for r in eng))
+    out["final"] = final
+    return out
 
 
 def summarize(records: Sequence[dict]) -> str:
@@ -99,6 +208,12 @@ def summarize(records: Sequence[dict]) -> str:
         out.append(f"async run: {r['n_ok']}/{r['n_deliveries']} delivered "
                    f"ok, air bytes {r['bytes_air']:.0f}, "
                    f"t_end {r['t_end']:.1f}s")
+    series = {r["name"] for r in records if r.get("kind") == "series"}
+    if series:
+        named = extract_series(records)
+        out.append("series: " + "  ".join(
+            f"{n}[{len(named[n]['steps'])}]"
+            f"→{named[n]['values'][-1]:.6g}" for n in sorted(series)))
     kernels = of_kind(records, "kernel")
     if kernels:
         per: dict = {}

@@ -10,7 +10,9 @@ instrumented engine with the tracer off against the committed baseline).
 
 Events are plain dicts with a ``kind`` field, buffered in memory and
 flushed as JSONL (first record is a schema header, last is the
-:class:`~repro.obs.metrics.Metrics` snapshot).  Two clocks coexist:
+:class:`~repro.obs.metrics.Metrics` snapshot).  Paths ending in ``.gz``
+are gzip-compressed transparently, on write and on :func:`load` — the
+mega-1000 traces CI uploads shrink ~20x.  Two clocks coexist:
 
 * **sim time** — event fields named ``t``/``t0``/``t_done`` carry
   simulated seconds (the engine's clock);
@@ -31,23 +33,42 @@ Event kinds emitted by the instrumented stack:
     ``span``       generic host-time stage span
     ``link``       channel link-budget sample (elevation, fade, p_seg)
     ``outage``     blocked-window refresh summary per station
+    ``series``     one (name, step, value) time-series sample — the
+                   per-round convergence/byte curves the run ledger
+                   (:mod:`repro.obs.ledger`) folds into cross-run tables
+                   and the ``convgate`` CI gate compares (schema v2)
 
 ``trace-diff`` (:mod:`repro.obs.summary`) compares the deterministic
 sim-schema kinds (round/delivery/arq/cohort) and ignores host-timing
 fields, so fast-vs-oracle engine traces diff clean whenever the Delivery
 timelines agree — and localize the FIRST diverging record when they
 don't.
+
+Two buffering modes:
+
+* the default buffers every record in memory until :meth:`flush` /
+  :meth:`close` rewrites the whole file — what short runs and the
+  overhead bench use (no I/O inside the timed region);
+* ``stream_every=N`` appends to the file every N buffered records and
+  drops them from memory, so week-long async mega runs trace with
+  bounded memory; the header goes out first, the metrics snapshot last
+  (on :meth:`close`), exactly like the buffered layout, and
+  ``repro.obs watch`` tails the growing file from a separate process.
 """
 from __future__ import annotations
 
 import contextlib
+import gzip
 import json
 import time
-from typing import List, Optional
+from typing import IO, List, Optional
 
 from .metrics import Metrics
 
-SCHEMA_VERSION = 1
+# v1: header/event/metrics records.  v2 adds the ``series`` record kind
+# (additive — every v1 record reads unchanged; `tests/data/
+# trace_schema_v1.jsonl` pins the compatibility).
+SCHEMA_VERSION = 2
 
 # the active tracer; hot paths read this once per round via active()
 TRACER: Optional["Tracer"] = None
@@ -57,32 +78,70 @@ _STACK: List["Tracer"] = []
 HOST_FIELDS = ("t_host", "dur_host")
 
 
+def _open(path: str, mode: str) -> IO:
+    """Open a trace path, gzip-compressed when it ends in ``.gz``."""
+    if path.endswith(".gz"):
+        return gzip.open(path, mode if mode.endswith("t") else mode + "t")
+    return open(path, mode)
+
+
 class Tracer:
     """In-memory event buffer + metrics registry with JSONL flush.
 
     ``path=None`` keeps everything in memory (tests, overhead benches);
-    a path writes JSONL on :meth:`flush` / :meth:`close`.
+    a path writes JSONL on :meth:`flush` / :meth:`close` (gzip when it
+    ends in ``.gz``).  ``stream_every=N`` switches to incremental
+    appends: every N records the buffer is written out and cleared, so
+    memory stays bounded on long runs (``records()`` then only covers
+    the not-yet-flushed tail).
     """
 
-    __slots__ = ("events", "metrics", "path", "meta", "_t0_host", "_closed")
+    __slots__ = ("events", "metrics", "path", "meta", "stream_every",
+                 "_t0_host", "_closed", "_fh", "_n_streamed")
 
-    def __init__(self, path: Optional[str] = None, **meta):
+    def __init__(self, path: Optional[str] = None,
+                 stream_every: Optional[int] = None, **meta):
+        if stream_every is not None and path is None:
+            raise ValueError("stream_every needs a path to append to")
         self.events: List[dict] = []
         self.metrics = Metrics()
         self.path = path
         self.meta = meta
+        self.stream_every = stream_every
         self._t0_host = time.perf_counter()
         self._closed = False
+        self._fh: Optional[IO] = None
+        self._n_streamed = 0
 
     # -- emission ----------------------------------------------------------
     def event(self, kind: str, **fields) -> None:
         """Record one typed event (fields must be JSON-serializable)."""
         fields["kind"] = kind
         self.events.append(fields)
+        if self.stream_every and len(self.events) >= self.stream_every:
+            self._stream_out()
 
     def raw(self, record: dict) -> None:
         """Record a pre-built event dict (must carry ``kind``)."""
         self.events.append(record)
+        if self.stream_every and len(self.events) >= self.stream_every:
+            self._stream_out()
+
+    def series(self, name: str, step: int, value: float, **labels) -> None:
+        """Record one time-series sample: ``(name, step, value)``.
+
+        The per-round curves (``e_K``, ``bytes_up``, ``ef_resid_norm``,
+        ``staleness``, …) are emitted through here; the ledger
+        (:mod:`repro.obs.ledger`) groups samples by name into
+        step-ordered curves for cross-run comparison and the
+        convergence gate."""
+        rec = {"kind": "series", "name": name, "step": int(step),
+               "value": float(value)}
+        if labels:
+            rec.update(labels)
+        self.events.append(rec)
+        if self.stream_every and len(self.events) >= self.stream_every:
+            self._stream_out()
 
     def host_now(self) -> float:
         return time.perf_counter() - self._t0_host
@@ -97,27 +156,63 @@ class Tracer:
             fields["kind"] = kind
             fields["t_host"] = t0 - self._t0_host
             fields["dur_host"] = time.perf_counter() - t0
-            self.events.append(fields)
+            self.raw(fields)
 
     # -- output ------------------------------------------------------------
-    def records(self) -> List[dict]:
-        """Header + events + metrics snapshot — what :meth:`flush` writes,
-        and what :mod:`repro.obs.summary` consumes directly in-memory."""
-        header = {"kind": "header", "schema": SCHEMA_VERSION,
-                  "n_events": len(self.events)}
+    def _header(self) -> dict:
+        header = {"kind": "header", "schema": SCHEMA_VERSION}
+        if self.stream_every:
+            header["streamed"] = True       # n_events unknown up front
+        else:
+            header["n_events"] = len(self.events)
         header.update(self.meta)
-        out = [header]
-        out.extend(self.events)
+        return header
+
+    def _metrics_record(self) -> Optional[dict]:
         m = self.metrics.to_dict()
         if m["counters"] or m["histograms"]:
-            out.append({"kind": "metrics", **m})
+            return {"kind": "metrics", **m}
+        return None
+
+    def records(self) -> List[dict]:
+        """Header + buffered events + metrics snapshot — what
+        :meth:`flush` writes, and what :mod:`repro.obs.summary` consumes
+        directly in-memory.  In streaming mode this only covers the
+        not-yet-flushed tail; use :func:`load` on the closed file for
+        the full record stream."""
+        out = [self._header()]
+        out.extend(self.events)
+        m = self._metrics_record()
+        if m is not None:
+            out.append(m)
         return out
 
+    def _stream_out(self) -> None:
+        """Append the buffered events to the file and drop them (the
+        bounded-memory path; header goes out first, exactly once)."""
+        if self._fh is None:
+            self._fh = _open(self.path, "wt")
+            self._fh.write(json.dumps(self._header(), sort_keys=True,
+                                      allow_nan=False) + "\n")
+        for rec in self.events:
+            self._fh.write(json.dumps(rec, sort_keys=True,
+                                      allow_nan=False) + "\n")
+        self._n_streamed += len(self.events)
+        self.events.clear()
+
     def flush(self) -> Optional[str]:
-        """Write the JSONL file (no-op without a path); returns the path."""
+        """Write the JSONL file (no-op without a path); returns the path.
+
+        Buffered mode rewrites the whole file; streaming mode appends
+        whatever is pending and flushes the handle (the metrics snapshot
+        is only written by :meth:`close`)."""
         if self.path is None:
             return None
-        with open(self.path, "w") as f:
+        if self.stream_every:
+            self._stream_out()
+            self._fh.flush()
+            return self.path
+        with _open(self.path, "wt") as f:
             for rec in self.records():
                 f.write(json.dumps(rec, sort_keys=True,
                                    allow_nan=False) + "\n")
@@ -127,6 +222,15 @@ class Tracer:
         if self._closed:
             return self.path
         self._closed = True
+        if self.stream_every and self.path is not None:
+            self._stream_out()
+            m = self._metrics_record()
+            if m is not None:
+                self._fh.write(json.dumps(m, sort_keys=True,
+                                          allow_nan=False) + "\n")
+            self._fh.close()
+            self._fh = None
+            return self.path
         return self.flush()
 
 
@@ -135,11 +239,12 @@ def active() -> Optional[Tracer]:
     return TRACER
 
 
-def enable(path: Optional[str] = None, **meta) -> Tracer:
+def enable(path: Optional[str] = None,
+           stream_every: Optional[int] = None, **meta) -> Tracer:
     """Install a fresh tracer as the active one (stackable: ``disable``
     restores whatever was active before)."""
     global TRACER
-    t = Tracer(path, **meta)
+    t = Tracer(path, stream_every=stream_every, **meta)
     _STACK.append(t)
     TRACER = t
     return t
@@ -158,9 +263,10 @@ def disable() -> Optional[Tracer]:
 
 
 @contextlib.contextmanager
-def tracing(path: Optional[str] = None, **meta):
+def tracing(path: Optional[str] = None,
+            stream_every: Optional[int] = None, **meta):
     """``with tracing("run.jsonl") as trc: ...`` — enable/flush scoped."""
-    t = enable(path, **meta)
+    t = enable(path, stream_every=stream_every, **meta)
     try:
         yield t
     finally:
@@ -168,9 +274,9 @@ def tracing(path: Optional[str] = None, **meta):
 
 
 def load(path: str) -> List[dict]:
-    """Read a JSONL trace file back into a record list."""
+    """Read a JSONL trace file back into a record list (``.gz`` ok)."""
     records = []
-    with open(path) as f:
+    with _open(path, "rt") as f:
         for line in f:
             line = line.strip()
             if line:

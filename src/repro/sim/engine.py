@@ -208,7 +208,7 @@ def _emit_round_trace(trc, res: "RoundResult", engine: str, k: int) -> None:
     """Emit one sync round's records (kinds: delivery/arq/cohort/round)
     and bump the byte/latency metrics."""
     mtr = trc.metrics
-    lat = mtr.histogram("delivery_latency")
+    lat = mtr.histogram("delivery_latency", lo=0.0)
     air_c = mtr.counter("bytes_air")
     retx_c = mtr.counter("bytes_retx")
     dlv_c = mtr.counter("deliveries")
@@ -241,12 +241,16 @@ def _emit_round_trace(trc, res: "RoundResult", engine: str, k: int) -> None:
                   t_last=float(c.t_last),
                   nbytes=float(sum(d.nbytes for d in c.deliveries)))
     if res.deliveries:
-        mtr.histogram("lost_frac").observe(n_lost / len(res.deliveries))
+        mtr.histogram("lost_frac", lo=0.0).observe(
+            n_lost / len(res.deliveries))
     trc.event("round", round=k, t0=float(res.t0),
               duration=float(res.duration),
               n_scheduled=int(res.scheduled.sum()),
               n_delivered=int(res.mask.sum()), n_lost=n_lost,
               bytes_air=bytes_air, engine=engine)
+    trc.series("bytes_air", k, bytes_air)
+    if res.deliveries:
+        trc.series("lost_frac_air", k, n_lost / len(res.deliveries))
 
 
 def _emit_async_trace(trc, deliveries: Sequence[Delivery], engine: str,
@@ -254,7 +258,7 @@ def _emit_async_trace(trc, deliveries: Sequence[Delivery], engine: str,
     """Emit one async run's records: per-delivery (``round=None``,
     tagged with the run index) plus a closing ``async_run`` summary."""
     mtr = trc.metrics
-    lat = mtr.histogram("delivery_latency")
+    lat = mtr.histogram("delivery_latency", lo=0.0)
     air_c = mtr.counter("bytes_air")
     retx_c = mtr.counter("bytes_retx")
     dlv_c = mtr.counter("deliveries")
@@ -285,6 +289,12 @@ def _emit_async_trace(trc, deliveries: Sequence[Delivery], engine: str,
               n_requested=int(n_requested), n_deliveries=len(deliveries),
               n_ok=n_ok, n_lost=len(deliveries) - n_ok,
               bytes_air=bytes_air, t_end=float(t_end), engine=engine)
+    # async curves get their own names: a trace mixing sync rounds and
+    # async runs would otherwise collide on the step axis
+    trc.series("async_bytes_air", run, bytes_air)
+    if deliveries:
+        trc.series("async_lost_frac", run,
+                   (len(deliveries) - n_ok) / len(deliveries))
 
 
 class Engine:

@@ -27,6 +27,7 @@ SIMWIRE_MODULES = {
     "test_bench_harness",
     "test_channel",
     "test_obs",
+    "test_obs_ledger",
 }
 
 

@@ -113,6 +113,155 @@ def test_span_records_host_timing():
 
 
 # ---------------------------------------------------------------------------
+# series records, gzip traces, streaming flush (schema v2)
+# ---------------------------------------------------------------------------
+
+def test_series_records_and_extraction():
+    from repro.obs.summary import extract_series
+    with obs.tracing() as trc:
+        trc.series("e_K", 1, 0.5)
+        trc.series("e_K", 0, 1.0)          # out of order on purpose
+        trc.series("bytes_up", 0, 128.0, station=0)
+        records = trc.records()
+    series = extract_series(records)
+    assert series["e_K"] == {"steps": [0, 1], "values": [1.0, 0.5]}
+    assert series["bytes_up"]["values"] == [128.0]
+    # labelled fields survive on the raw record
+    [b] = [r for r in records if r.get("name") == "bytes_up"]
+    assert b["station"] == 0
+
+
+def test_series_stays_out_of_diff_contract():
+    # series curves carry error values that legitimately differ between
+    # equivalent engine configurations — they must never break the
+    # fast-vs-oracle diff
+    assert "series" not in DIFF_KINDS
+    ra = _trace_run("walker-kiruna", fast=True)
+    rb = [dict(r) for r in ra]
+    rb.append({"kind": "series", "name": "e_K", "step": 0, "value": 1.0})
+    equal, _ = obs.diff(ra, rb)
+    assert equal
+
+
+def test_gzip_trace_roundtrip(tmp_path):
+    path = str(tmp_path / "t.jsonl.gz")
+    with obs.tracing(path, scenario="unit") as trc:
+        trc.event("round", round=0, t0=0.0, duration=1.0, n_scheduled=1,
+                  n_delivered=1, n_lost=0, bytes_air=10.0, engine="fast")
+        trc.series("e_K", 0, 2.5)
+        trc.metrics.counter("bytes_air").add(10.0)
+    raw = open(path, "rb").read()
+    assert raw[:2] == b"\x1f\x8b", "not gzip-compressed on disk"
+    records = obs.load(path)
+    assert records[0]["kind"] == "header"
+    assert of_kind(records, "series")[0]["value"] == 2.5
+    [m] = of_kind(records, "metrics")
+    assert m["counters"]["bytes_air"]["total"] == 10.0
+
+
+def test_gzip_cli_subcommands(tmp_path, capsys):
+    from repro.obs.__main__ import main
+    pa = str(tmp_path / "a.jsonl.gz")
+    eng = Engine(get_scenario("walker-kiruna"), seed=0)
+    with obs.tracing(pa):
+        eng.run_round(0.0, MSG)
+    assert main(["summarize", pa]) == 0
+    assert "round" in capsys.readouterr().out
+    assert main(["check", pa]) == 0
+    assert main(["diff", pa, pa]) == 0
+    capsys.readouterr()
+
+
+def test_streaming_flush_bounded_memory(tmp_path):
+    path = str(tmp_path / "s.jsonl")
+    with obs.tracing(path, stream_every=5, scenario="stream") as trc:
+        for k in range(17):
+            trc.event("round", round=k, t0=0.0, duration=1.0,
+                      n_scheduled=0, n_delivered=0, n_lost=0,
+                      bytes_air=0.0, engine="fast")
+            assert len(trc.events) < 5          # buffer stays bounded
+        trc.metrics.counter("bytes_air").add(1.0)
+    records = obs.load(path)
+    assert records[0]["kind"] == "header" and records[0]["streamed"]
+    assert [r["round"] for r in of_kind(records, "round")] == list(range(17))
+    # metrics snapshot semantics kept: exactly one, last, complete
+    assert records[-1]["kind"] == "metrics"
+    assert records[-1]["counters"]["bytes_air"]["total"] == 1.0
+    assert sum(r["kind"] == "metrics" for r in records) == 1
+
+
+def test_streaming_flush_gzip_and_partial_visibility(tmp_path):
+    path = str(tmp_path / "s.jsonl.gz")
+    with obs.tracing(path, stream_every=2) as trc:
+        for k in range(4):
+            trc.event("round", round=k, t0=0.0, duration=1.0,
+                      n_scheduled=0, n_delivered=0, n_lost=0,
+                      bytes_air=0.0, engine="fast")
+        trc.flush()
+    records = obs.load(path)
+    assert len(of_kind(records, "round")) == 4
+
+
+def test_streaming_without_path_rejected():
+    with pytest.raises(ValueError):
+        obs.Tracer(stream_every=10)
+
+
+def test_summarize_dict_machine_readable():
+    from repro.obs.summary import summarize_dict
+    records = _trace_run("lossy-uplink", fast=True, rounds=2)
+    s = summarize_dict(records)
+    assert s["schema"] == 2
+    assert s["meta"]["scenario"] == "lossy-uplink"
+    assert s["round_kind"] == "round" and s["n_rounds"] == 2
+    assert s["deliveries"]["n"] == len(of_kind(records, "delivery"))
+    assert s["final"]["bytes_air"] == \
+        sum(r["bytes_air"] for r in of_kind(records, "round"))
+    assert "bytes_air" in s["series"]
+    json.dumps(s, allow_nan=False)      # strict-JSON machine output
+
+
+def test_cli_summarize_json(tmp_path, capsys):
+    from repro.obs.__main__ import main
+    pa = str(tmp_path / "a.jsonl")
+    eng = Engine(get_scenario("walker-kiruna"), seed=0)
+    with obs.tracing(pa):
+        eng.run_round(0.0, MSG)
+    assert main(["summarize", pa, "--json"]) == 0
+    s = json.loads(capsys.readouterr().out)
+    assert s["n_rounds"] == 1 and s["round_kind"] == "round"
+
+
+# ---------------------------------------------------------------------------
+# schema-v1 compatibility (committed fixture)
+# ---------------------------------------------------------------------------
+
+V1_FIXTURE = __file__.rsplit("/", 1)[0] + "/data/trace_schema_v1.jsonl"
+
+
+def test_v1_fixture_still_loads_and_summarizes():
+    from repro.obs.summary import summarize_dict
+    records = obs.load(V1_FIXTURE)
+    assert records[0]["schema"] == 1
+    text = obs.summarize(records)
+    assert "round" in text
+    assert obs.check(records) == []
+    s = summarize_dict(records)
+    assert s["round_kind"] == "fl_round" and s["n_rounds"] == 2
+    # v1 has no series records: the federated curves are synthesized
+    # from the fl_round records so ledger/convgate read old traces too
+    assert s["series"]["e_K"]["values"] == [24.25, 21.5]
+    assert s["series"]["bytes_up"]["values"] == [2112.0, 4224.0]
+    assert s["final"]["e_K"] == 21.5
+
+
+def test_v1_fixture_diffs_against_itself():
+    records = obs.load(V1_FIXTURE)
+    equal, report = obs.diff(records, records)
+    assert equal, report
+
+
+# ---------------------------------------------------------------------------
 # engine emission + fast-vs-oracle trace-diff (the tentpole contract)
 # ---------------------------------------------------------------------------
 
@@ -210,6 +359,32 @@ def test_histogram_stats_and_bounds():
     assert d["count"] == 3 and d["min"] == 0.5 and d["max"] == 20.0
     assert d["counts"] == [1, 1, 1]
     assert abs(d["mean"] - 7.5) < 1e-9
+    # without a lower bound nothing underflows; above-range samples are
+    # surfaced as the explicit overflow count (= the last bucket)
+    assert d["lo"] is None and d["underflow"] == 0
+    assert d["overflow"] == 1
+
+
+def test_histogram_underflow_and_overflow_explicit():
+    h = obs.Metrics().histogram("stale", bounds=(1.0, 10.0), lo=0.0)
+    for v in (-2.0, -1.0, 0.5, 5.0, 100.0, 200.0):
+        h.observe(v)
+    d = h.to_dict()
+    # below-lo samples are tallied, not folded into the first bucket
+    assert d["underflow"] == 2
+    assert d["overflow"] == 2 and d["counts"] == [1, 1, 2]
+    assert d["counts"][0] == 1          # only the in-range 0.5
+    # sidecar stats still describe EVERY observation
+    assert d["count"] == 6 and d["min"] == -2.0 and d["max"] == 200.0
+    assert d["sum"] == -2.0 - 1.0 + 0.5 + 5.0 + 100.0 + 200.0
+
+
+def test_engine_latency_histogram_has_lower_bound():
+    records = _trace_run("lossy-uplink", fast=True, rounds=2)
+    [m] = of_kind(records, "metrics")
+    lat = m["histograms"]["delivery_latency"]
+    assert lat["lo"] == 0.0 and lat["underflow"] == 0
+    assert "overflow" in lat
 
 
 # ---------------------------------------------------------------------------
