@@ -18,9 +18,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.api import Experiment
 from repro.constellation.orbits import GroundStation, Walker
 from repro.core.fedlt import optimality_error
-from repro.core.fedlt_sat import SpaceRunner
 from repro.sim import Engine, Scenario
 
 from .common import COMPRESSORS, RESULTS_DIR, make_algorithm, problem
@@ -45,11 +45,11 @@ def run(mc_runs=2, rounds=400, scale=1.0, verbose=True):
             for mc in range(mc_runs):
                 data, loss, xbar, n_agents = problem(seed=mc, scale=scale)
                 alg = make_algorithm(algo, loss, C, ef=True)
-                st = alg.init(jnp.zeros((xbar.shape[0],)), n_agents)
-                runner = SpaceRunner(engine, compressor=C)
-                st, logs = runner.run(alg, st, data, rounds,
-                                      jax.random.PRNGKey(200 + mc))
-                errs.append(float(optimality_error(st.x, xbar)))
+                exp = Experiment(None, alg, engine=engine, compressor=C)
+                st = exp.init(jnp.zeros((xbar.shape[0],)), n_agents)
+                res = exp.run(st, data, rounds,
+                              jax.random.PRNGKey(200 + mc))
+                errs.append(float(optimality_error(res.state.x, xbar)))
             table[(comp_name, algo)] = (float(np.mean(errs)), float(np.std(errs)))
             if verbose:
                 m, s = table[(comp_name, algo)]

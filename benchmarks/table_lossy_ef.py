@@ -41,14 +41,13 @@ import time
 import jax
 import jax.numpy as jnp
 
+from repro.api import Experiment
 from repro.channel import ChannelModel, SelectiveRepeatARQ
 from repro.core.compression import UniformQuantizer
 from repro.core.error_feedback import EFChannel
 from repro.core.fedlt import FedLT, optimality_error
-from repro.core.fedlt_sat import SpaceRunner
 from repro.data.logistic import generate, make_local_loss, solve_global
-from repro.obs import tracing
-from repro.obs.ledger import ingest, load_ledger
+from repro.obs.ledger import load_ledger
 from repro.obs.report import lossy_ef_rows
 from repro.sim import Engine, get_scenario
 
@@ -94,19 +93,18 @@ def run(loss_rates, rounds=1500, n_agents=100, dim=100, m=100, seed=0,
         for arm, ef, robust in ARMS:
             alg = FedLT(loss=loss, uplink=EFChannel(C, enabled=ef),
                         downlink=EFChannel(C, enabled=ef), **TUNED)
-            st = alg.init(jnp.zeros((dim,)), n_agents)
-            runner = SpaceRunner(engine, compressor=C, channel=ch,
-                                 loss_robust=robust)
-            with tracing(scenario="walker-kiruna", algorithm="FedLT",
-                         compressor="quant10", channel=f"flat-{p}",
-                         arm=arm, loss_rate=p, rounds=rounds,
-                         seed=seed) as trc:
-                runner.run(alg, st, data, rounds,
-                           jax.random.PRNGKey(100 + seed),
-                           error_fn=err, log_every=rounds)
-                records = trc.records()
-            entry, _ = ingest(records, ledger_path)
-            run_ids.append(entry["run_id"])
+            # the facade installs ch on the shared engine (ChannelCache
+            # invalidation included), stamps the self-describing meta
+            # (scenario/compressor/channel/topology derived, not retyped),
+            # traces the run, and folds it into the ledger
+            exp = Experiment(None, alg, engine=engine, compressor=C,
+                             channel=ch, loss_robust=robust,
+                             meta=dict(arm=arm, loss_rate=p, rounds=rounds,
+                                       seed=seed))
+            st = exp.init(jnp.zeros((dim,)), n_agents)
+            res = exp.run(st, data, rounds, jax.random.PRNGKey(100 + seed),
+                          error_fn=err, log_every=rounds, ledger=ledger_path)
+            run_ids.append(res.run_id)
     # ---- reporting: exclusively from the ledger -------------------------
     by_id = {e["run_id"]: e for e in load_ledger(ledger_path)}
     entries = [by_id[r] for r in run_ids]     # sweep order

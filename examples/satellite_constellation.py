@@ -26,13 +26,12 @@ import jax
 import jax.numpy as jnp
 
 from repro import obs
+from repro.api import Experiment
 from repro.core.baselines import FedAvg
 from repro.core.compression import UniformQuantizer
 from repro.core.error_feedback import EFChannel
 from repro.core.fedlt import FedLT, optimality_error
-from repro.core.fedlt_sat import SpaceRunner
 from repro.data.logistic import generate, make_local_loss, solve_global
-from repro.sim import Engine, get_scenario
 
 
 def main(rounds=120):
@@ -44,23 +43,20 @@ def main(rounds=120):
     quant = UniformQuantizer(levels=10, vmin=-1, vmax=1, clip=True)
     up, down = EFChannel(quant), EFChannel(quant)
 
-    def traced_run(name, runner, alg, st, key):
-        """One runner.run under a fresh obs trace; prints the obs
-        per-round table over the rounds that evaluated the error."""
+    def traced_run(name, exp, st, key):
+        """One Experiment.run, traced to a file; prints the obs per-round
+        table over the rounds that evaluated the error."""
         slug = "".join(c for c in name.split(" ")[0].lower()
                        if c.isalnum())
         path = f"constellation_{slug}.jsonl"
-        with obs.tracing(path, example=name) as trc:
-            st, logs = runner.run(
-                alg, st, data, rounds, key,
-                error_fn=lambda s: optimality_error(s.x, x_star),
-                log_every=20)
-            records = trc.records()
-        evaluated = [r for r in records if r.get("kind") == "fl_round"
+        res = exp.run(st, data, rounds, key,
+                      error_fn=lambda s: optimality_error(s.x, x_star),
+                      log_every=20, trace=path)
+        evaluated = [r for r in res.records if r.get("kind") == "fl_round"
                      and r.get("error") is not None]
         print(f"\n=== {name} (trace: {path}) ===")
         print(obs.render_rounds(evaluated))
-        return st, logs
+        return res.state, res.logs
 
     algs = {
         # fused_uplink=True: the compress→EF→pack chain runs as ONE Pallas
@@ -72,30 +68,33 @@ def main(rounds=120):
                                 uplink=up, downlink=down),
     }
     for name, alg in algs.items():
-        st = alg.init(jnp.zeros((dim,)), n_agents)
         # measure="cohort": bytes_up accounted from the actually-transmitted
         # wire state, batched per contact-window cohort
-        runner = SpaceRunner(Engine(get_scenario("walker-kiruna")),
-                             compressor=quant, measure="cohort")
-        traced_run(name, runner, alg, st, jax.random.PRNGKey(2))
+        exp = Experiment.from_scenario("walker-kiruna", algorithm=alg,
+                                       compressor=quant, measure="cohort",
+                                       meta=dict(example=name))
+        st = exp.init(jnp.zeros((dim,)), n_agents)
+        traced_run(name, exp, st, jax.random.PRNGKey(2))
 
     # buffered-async: two ground stations, staleness-weighted aggregation
     alg = algs["Fed-LTSat"]
-    st = alg.init(jnp.zeros((dim,)), n_agents)
-    runner = SpaceRunner(Engine(get_scenario("dual-station")),
-                         compressor=quant,
-                         mode="async", buffer_size=10, staleness_alpha=0.5)
-    traced_run("async (Fed-LTSat, dual-station)", runner, alg, st,
-               jax.random.PRNGKey(3))
+    name = "async (Fed-LTSat, dual-station)"
+    exp = Experiment.from_scenario("dual-station", algorithm=alg,
+                                   compressor=quant, mode="async",
+                                   buffer_size=10, staleness_alpha=0.5,
+                                   meta=dict(example=name))
+    st = exp.init(jnp.zeros((dim,)), n_agents)
+    traced_run(name, exp, st, jax.random.PRNGKey(3))
 
     # lossy uplink: 10% segment erasures with selective-repeat ARQ; lost
     # updates keep their EF residual (loss-robust EF) so their content
     # telescopes into the next successful pass
-    st = alg.init(jnp.zeros((dim,)), n_agents)
-    runner = SpaceRunner(Engine(get_scenario("lossy-uplink")),
-                         compressor=quant, measure="cohort")
-    traced_run("lossy (Fed-LTSat, loss-robust EF)", runner, alg, st,
-               jax.random.PRNGKey(4))
+    name = "lossy (Fed-LTSat, loss-robust EF)"
+    exp = Experiment.from_scenario("lossy-uplink", algorithm=alg,
+                                   compressor=quant, measure="cohort",
+                                   meta=dict(example=name))
+    st = exp.init(jnp.zeros((dim,)), n_agents)
+    traced_run(name, exp, st, jax.random.PRNGKey(4))
 
 
 if __name__ == "__main__":

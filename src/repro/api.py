@@ -1,0 +1,201 @@
+"""The unified experiment facade — ``repro.api.Experiment``.
+
+One object owns what used to be a four-step constructor sprawl
+(``Engine(get_scenario(...))`` → channel install → ``SpaceRunner(...)``
+→ ``tracing(...)`` bookkeeping):
+
+    from repro.api import Experiment
+
+    exp = Experiment.from_scenario(
+        "plane-agg-walker", algorithm=alg, compressor=quant,
+        topology="plane")            # optional override of the scenario's
+    state = exp.init(x0, n_agents)   # delegate to the algorithm
+    result = exp.run(state, data, n_rounds=60, key=key,
+                     error_fn=err, trace=True)
+    result.ingest("runs/ledger.jsonl")
+
+The facade resolves the scenario (by registry name or instance), applies
+a ``topology`` override via ``dataclasses.replace``, builds the engine
+(or reuses a caller-supplied one — the sweep idiom where a shared engine
+amortizes contact plans and cached ARQ plans across arms), installs the
+channel through :meth:`repro.sim.engine.Engine.install_channel` (which
+invalidates the fast path's memoized channel state — the historical
+direct-mutation footgun), and wires tracing with self-describing ledger
+meta (scenario / algorithm / compressor / channel / topology / mode).
+
+The old constructors keep working — :class:`Experiment` is thin
+delegation over :class:`repro.core.fedlt_sat.SpaceRunner`, not a
+replacement; anything not yet surfaced here can still be done by hand.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, List, Optional, Union
+
+from .core.fedlt_sat import RoundLog, SpaceRunner
+from .sim import Engine, Scenario, get_scenario, make_topology
+
+
+def describe_compressor(c) -> str:
+    """Short ledger label for a compressor (``quant10``, ``topk0.1``,
+    ``rand0.2``, class name fallback, ``none``)."""
+    if c is None:
+        return "none"
+    name = type(c).__name__
+    if name == "UniformQuantizer":
+        return f"quant{c.levels}"
+    if name == "TopK":
+        return f"topk{c.fraction:g}"
+    if name == "RandD":
+        return f"rand{c.fraction:g}"
+    if name == "Identity":
+        return "identity"
+    return name
+
+
+def describe_channel(ch) -> str:
+    """Short ledger label for a channel (``lossless``, ``flat-0.1``,
+    ``budget``)."""
+    if ch is None:
+        return "lossless"
+    if getattr(ch, "budget", None) is not None:
+        return "budget"
+    return f"flat-{getattr(ch, 'loss', '?')}"
+
+
+@dataclasses.dataclass
+class ExperimentResult:
+    """What one :meth:`Experiment.run` produced: the final algorithm
+    state, the per-round logs, and (when tracing was on) the trace
+    records plus the ledger id if they were ingested."""
+    state: Any
+    logs: List[RoundLog]
+    records: Optional[List[dict]] = None
+    run_id: Optional[str] = None
+
+    @property
+    def final(self) -> Optional[RoundLog]:
+        return self.logs[-1] if self.logs else None
+
+    def ingest(self, ledger_path: str) -> dict:
+        """Fold this run's trace into a ledger; returns the entry."""
+        if self.records is None:
+            raise ValueError(
+                "no trace records to ingest — call run(..., trace=True) "
+                "(or pass ledger=... to run, which implies it)")
+        from .obs.ledger import ingest as _ingest
+        entry, _ = _ingest(self.records, ledger_path)
+        self.run_id = entry["run_id"]
+        return entry
+
+
+class Experiment:
+    """A configured (scenario × algorithm × compression × channel ×
+    topology × mode) federated experiment.  See the module docstring."""
+
+    def __init__(self, scenario: Union[str, Scenario, None], algorithm, *,
+                 compressor=None, channel=None,
+                 topology: Optional[object] = None,
+                 mode: str = "sync", measure: str = "probe",
+                 loss_robust: bool = True, buffer_size: int = 8,
+                 staleness_alpha: float = 0.5, wire_bits: float = 32.0,
+                 seed: int = 0, fast: bool = True,
+                 engine: Optional[Engine] = None,
+                 meta: Optional[Dict[str, Any]] = None):
+        if engine is not None:
+            # shared-engine sweeps: the engine's scenario wins; a
+            # conflicting topology request would silently not apply
+            scenario = engine.scenario
+            if (topology is not None
+                    and make_topology(topology) != engine.topology):
+                raise ValueError(
+                    f"engine= carries topology "
+                    f"{engine.topology.name!r} but topology="
+                    f"{make_topology(topology).name!r} was requested — "
+                    f"build the engine from the right scenario instead")
+        else:
+            if scenario is None:
+                raise ValueError("pass a scenario (name or Scenario) or "
+                                 "a prebuilt engine=")
+            if isinstance(scenario, str):
+                scenario = get_scenario(scenario)
+            if topology is not None:
+                scenario = dataclasses.replace(scenario, topology=topology)
+            engine = Engine(scenario, seed=seed, fast=fast)
+        self.scenario = scenario
+        self.algorithm = algorithm
+        self.meta = dict(meta or {})
+        self.runner = SpaceRunner(
+            engine, compressor=compressor, channel=channel, mode=mode,
+            measure=measure, loss_robust=loss_robust,
+            buffer_size=buffer_size, staleness_alpha=staleness_alpha,
+            wire_bits=wire_bits)
+
+    @classmethod
+    def from_scenario(cls, name: Union[str, Scenario], *, algorithm,
+                      **kwargs) -> "Experiment":
+        """The canonical constructor spelling:
+        ``Experiment.from_scenario("mega-1000", algorithm=alg, ...)``."""
+        return cls(name, algorithm, **kwargs)
+
+    # -- convenience delegation -------------------------------------------
+    @property
+    def engine(self) -> Engine:
+        return self.runner.engine
+
+    @property
+    def topology_name(self) -> str:
+        return self.engine.topology.name
+
+    def init(self, x0, n_agents: int):
+        """Delegate to the algorithm's state constructor."""
+        return self.algorithm.init(x0, n_agents)
+
+    def ledger_meta(self) -> Dict[str, Any]:
+        """The self-describing trace/ledger meta this experiment stamps
+        on its runs (caller ``meta=`` entries win)."""
+        out = dict(scenario=self.scenario.name,
+                   algorithm=type(self.algorithm).__name__,
+                   compressor=describe_compressor(self.runner.compressor),
+                   channel=describe_channel(
+                       self.runner.channel
+                       if self.runner.channel is not None
+                       else getattr(self.engine, "channel", None)),
+                   topology=self.topology_name,
+                   mode=self.runner.mode)
+        out.update(self.meta)
+        return out
+
+    def run(self, state, data, n_rounds: int, key, *,
+            error_fn: Optional[Callable] = None, log_every: int = 10,
+            trace: Union[bool, str] = False,
+            ledger: Optional[str] = None) -> ExperimentResult:
+        """Drive the algorithm ``n_rounds`` through the engine.
+
+        ``trace=True`` records an in-memory obs trace (``trace="path"``
+        streams it to a file as well); ``ledger="runs/x.jsonl"`` implies
+        tracing and ingests the finished trace.  Returns an
+        :class:`ExperimentResult`."""
+        from .obs import active as _active
+        from .obs import tracing
+        if not trace and ledger is not None:
+            trace = True
+        if not trace or _active() is not None:
+            # no tracing requested, or the caller already opened a tracer
+            # (nested tracing() scopes don't stack) — run under it as-is
+            state, logs = self.runner.run(self.algorithm, state, data,
+                                          n_rounds, key,
+                                          error_fn=error_fn,
+                                          log_every=log_every)
+            return ExperimentResult(state, logs)
+        path = trace if isinstance(trace, str) else None
+        with tracing(path, **self.ledger_meta()) as trc:
+            state, logs = self.runner.run(self.algorithm, state, data,
+                                          n_rounds, key,
+                                          error_fn=error_fn,
+                                          log_every=log_every)
+            records = trc.records()
+        result = ExperimentResult(state, logs, records)
+        if ledger is not None:
+            result.ingest(ledger)
+        return result

@@ -5,12 +5,13 @@ from .compression import (Identity, RandD, ScaledSign, TopK,
                           UniformQuantizer, make_compressor,
                           quantize_decode, quantize_encode)
 from .deploy import DeployFedLT, DeployState
-from .error_feedback import EFChannel
+from .error_feedback import EFChannel, GroupedEFChannel
 from .fedlt import FedLT, FedLTState, optimality_error
 from .fedlt_sat import RoundLog, SpaceRunner
 
 __all__ = [
     "FedLT", "FedLTState", "optimality_error", "EFChannel",
+    "GroupedEFChannel",
     "UniformQuantizer", "RandD", "TopK", "ScaledSign", "Identity",
     "make_compressor", "quantize_encode", "quantize_decode",
     "FedAvg", "FedProx", "LED", "FiveGCS",

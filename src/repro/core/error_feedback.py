@@ -25,7 +25,7 @@ import jax.numpy as jnp
 
 from .compression import (Compressor, Identity, UniformQuantizer,
                           quantize_decode, wire_index_bits)
-from .pytree import tree_add, tree_sub, tree_zeros_like
+from .pytree import tree_add, tree_map, tree_sub, tree_zeros_like
 
 
 @dataclasses.dataclass(frozen=True)
@@ -90,3 +90,97 @@ class EFChannel:
         pairs = [leaf(m, c) for m, c in zip(leaves_m, leaves_c)]
         return (treedef.unflatten([w for w, _ in pairs]),
                 treedef.unflatten([nc for _, nc in pairs]))
+
+
+@dataclasses.dataclass(frozen=True)
+class GroupedEFChannel:
+    """Error feedback with residuals held at aggregation *heads* instead
+    of at the leaves.
+
+    Under an in-orbit aggregation topology (``repro.sim.topology``) the
+    members of an orbital plane merge their raw updates at an elected
+    cluster head, and only the head's merged wire crosses the
+    ground-station bottleneck.  That opens a second EF placement: keep
+    ONE residual per *group* (plane) at the head, applied to the merged
+    sum right before the uplink —
+
+        group_msg_g = Σ_{i ∈ g} msg_i
+        wire_g      = C(group_msg_g + cache_g)
+        cache_g'    = group_msg_g + cache_g − wire_g
+
+    versus the leaf placement (:class:`EFChannel` vmapped over members)
+    where each member compresses before the ISL hop.  Head placement
+    compresses once per group, so the compressor sees the already-
+    averaged-scale merged signal; leaf placement keeps residual memory
+    with the member even as head election migrates.
+
+    Group membership is a ``(N,)`` int array of group ids (``-1`` =
+    inactive this round, contributes nothing); the cache carries a
+    leading group axis of static size ``n_groups``, so membership can
+    change every round (head re-election, orbital drift) while the
+    per-group residual stays put.  The same telescoping identity holds
+    per group: the sum of landed wires plus the final cache equals the
+    sum of everything the group's members ever offered.
+
+    Loss robustness mirrors :meth:`revert`'s leaf analogue in
+    ``repro.core.fedlt_sat._revert_lost_wires``: a destroyed head uplink
+    puts the discharged content back (``cache_g += wire_g``), so the
+    whole plane's round telescopes into the head's next successful
+    transmission instead of vanishing.
+    """
+
+    compressor: Compressor = Identity()
+    enabled: bool = True
+
+    def init_cache(self, msg_like, n_groups: int):
+        """Zero residuals: one slot per group, member shapes minus the
+        leading agent axis (``msg_like`` is agent-stacked)."""
+        return tree_map(
+            lambda x: jnp.zeros((n_groups,) + x.shape[1:], x.dtype),
+            msg_like)
+
+    def group_sum(self, msgs, groups, n_groups: int):
+        """Merge agent-stacked messages into per-group sums.
+
+        ``groups`` entries of ``-1`` are masked out (their rows add
+        zero); everything else scatters into its group's slot."""
+        g = jnp.asarray(groups, jnp.int32)
+        safe = jnp.where(g < 0, 0, g)
+        live = (g >= 0)
+
+        def leaf(x):
+            mask = live.reshape((-1,) + (1,) * (x.ndim - 1))
+            return jax.ops.segment_sum(
+                jnp.where(mask, x, 0).astype(x.dtype), safe,
+                num_segments=n_groups)
+
+        return tree_map(leaf, msgs)
+
+    def send(self, key, msgs, cache, groups, n_groups: int):
+        """Merge → correct → compress at the heads.
+
+        Returns ``(wire, new_cache)`` with a leading group axis on both;
+        groups with no live member this round still discharge their
+        cached residual (the head speaks for content banked in earlier
+        rounds), matching the telescoping accounting."""
+        gsum = self.group_sum(msgs, groups, n_groups)
+        if not self.enabled:
+            return self.compressor(key, gsum), cache
+        corrected = tree_add(gsum, cache)
+        wire = self.compressor(key, corrected)
+        return wire, tree_sub(corrected, wire)
+
+    def revert(self, new_cache, wire, lost):
+        """Loss-robust revert for destroyed head uplinks.
+
+        ``lost`` is a ``(n_groups,)`` bool mask.  For a lost group the
+        wire never landed, so the discharged content goes back into the
+        residual: ``cache + wire == corrected`` restores exactly the
+        pre-compression state the next send re-offers."""
+        m = jnp.asarray(lost)
+
+        def leaf(c, w):
+            mask = m.reshape((-1,) + (1,) * (c.ndim - 1))
+            return jnp.where(mask, c + w, c)
+
+        return tree_map(leaf, new_cache, wire)

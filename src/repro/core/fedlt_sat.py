@@ -52,6 +52,7 @@ class RoundLog:
     error: Optional[float] = None
     staleness: Optional[float] = None   # async: mean staleness this round
     n_lost: int = 0        # attempted uplinks the channel destroyed
+    bytes_isl: float = 0.0  # cumulative ISL bytes (in-orbit aggregation)
 
 
 @dataclasses.dataclass(frozen=True, eq=False)
@@ -104,9 +105,14 @@ class SpaceRunner:
             object.__setattr__(self, "engine", self.engine._engine())
         if self.channel is not None:
             # install on the (mutable) engine so every transmission the
-            # engine commits runs through the lossy-channel ARQ
-            self.engine.channel = self.channel
-            self.engine._refresh_blocked()   # conjunction blackouts
+            # engine commits runs through the lossy-channel ARQ; the
+            # engine's install path also invalidates its ChannelCache
+            # memo, which may hold ARQ plans for the previous channel
+            if hasattr(self.engine, "install_channel"):
+                self.engine.install_channel(self.channel)
+            else:                            # wrapped non-Engine stand-ins
+                self.engine.channel = self.channel
+                self.engine._refresh_blocked()
         if self.mode not in ("sync", "async"):
             raise ValueError(f"mode must be 'sync' or 'async', got {self.mode!r}")
         if self.measure not in ("probe", "cohort"):
@@ -116,6 +122,17 @@ class SpaceRunner:
             raise ValueError(
                 "measure='cohort' needs per-round RoundResults and is sync-"
                 "only; async runs account deliveries at the probe size")
+        topo = getattr(self.engine, "topology", None)
+        if topo is not None and getattr(topo, "kind", "direct") != "direct":
+            if self.mode == "async":
+                raise ValueError(
+                    "mode='async' needs topology='direct' — plane "
+                    "aggregation has no free-running merge point")
+            if self.measure == "cohort":
+                raise ValueError(
+                    "measure='cohort' groups per-satellite wires by "
+                    "contact window; plane topologies uplink one merged "
+                    "wire per head — use measure='probe'")
 
     # -- shared setup ------------------------------------------------------
     def _msg_bytes(self, state) -> float:
@@ -195,7 +212,7 @@ class SpaceRunner:
         wire_field = "z_hat" if hasattr(state, "z_hat") else "m_hat"
         has_cache = hasattr(state, "c_up")
         round_fn = jax.jit(alg.round)
-        t, up_bytes = 0.0, 0.0
+        t, up_bytes, isl_bytes = 0.0, 0.0, 0.0
         logs: List[RoundLog] = []
         keys = jax.random.split(key, n_rounds)
         trc = _obs_active()       # read once; None ⇒ tracing fully off
@@ -208,8 +225,17 @@ class SpaceRunner:
             t_round0 = t
             delivered = res.mask
             attempted = np.zeros_like(delivered)
-            for d in res.deliveries:
-                attempted[d.sat] = True
+            merged = getattr(res, "merged", None)
+            if merged is not None:
+                # in-orbit aggregation: one head delivery stands for every
+                # member it merged — they all trained and their wires all
+                # crossed ISLs, so a lost head wire loses (and, below,
+                # reverts) the whole plane
+                for d in res.deliveries:
+                    attempted[list(merged[d.sat])] = True
+            else:
+                for d in res.deliveries:
+                    attempted[d.sat] = True
             lost = attempted & ~delivered
             lossy = channel is not None and bool(lost.any())
             # with a lossy channel the satellites that transmitted-but-lost
@@ -263,26 +289,32 @@ class SpaceRunner:
                     up_bytes += sum(per_sat.values())
             else:
                 up_bytes += sum(d.nbytes_attempted for d in res.deliveries)
+            isl_bytes += float(getattr(res, "bytes_isl", 0.0))
             err = (float(error_fn(state))
                    if error_fn is not None and (k % log_every == 0
                                                 or k == n_rounds - 1) else None)
             logs.append(RoundLog(k, t, up_bytes, int(delivered.sum()), err,
-                                 n_lost=int(lost.sum())))
+                                 n_lost=int(lost.sum()),
+                                 bytes_isl=isl_bytes))
             if trc is not None:
                 # downlink ledger: the coordinator rebroadcasts the model
                 # to every satellite it scheduled (not modeled by the
                 # engine's uplink timeline, so accounted here)
                 down = trc.metrics.counter("bytes_down")
                 down.add(msg * float(res.scheduled.sum()))
+                plane_kw = ({} if merged is None
+                            else dict(bytes_isl=float(isl_bytes)))
                 trc.event("fl_round", round=k, t0=float(t_round0),
                           t=float(t), bytes_up=float(up_bytes),
                           n_active=int(delivered.sum()),
                           n_lost=int(lost.sum()),
                           error=err if err == err else None,
-                          mode="sync")
+                          mode="sync", **plane_kw)
                 # first-class convergence/byte curves for the run ledger
                 trc.series("bytes_up", k, up_bytes)
                 trc.series("bytes_down", k, down.total)
+                if merged is not None:
+                    trc.series("bytes_isl_cum", k, isl_bytes)
                 n_att = int(attempted.sum())
                 trc.series("lost_frac", k,
                            float(lost.sum()) / n_att if n_att else 0.0)

@@ -40,7 +40,8 @@ LEDGER_SCHEMA = 1
 DEFAULT_LEDGER = os.path.join("runs", "ledger.jsonl")
 
 # header-meta keys promoted to top-level ledger fields
-_PROMOTED = ("scenario", "algorithm", "compressor", "channel", "mode")
+_PROMOTED = ("scenario", "algorithm", "compressor", "channel", "mode",
+             "topology")
 
 
 def git_sha() -> str:

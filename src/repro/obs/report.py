@@ -131,6 +131,34 @@ def lossy_ef_rows(entries: Sequence[dict]) -> List[dict]:
     return rows
 
 
+def plane_agg_rows(entries: Sequence[dict]) -> List[dict]:
+    """The ``benchmarks/table_plane_agg.py`` row dicts, rebuilt purely
+    from ledger entries (promoted ``topology`` + meta ``arm``; final:
+    e_K / bytes_up / n_active; series: ``bytes_isl_cum``) — same
+    no-recomputation contract as :func:`lossy_ef_rows`.
+
+    ``bytes_gs`` is the final cumulative GS air-byte count,
+    ``bytes_isl`` the final cumulative ISL wire bytes (0 for direct
+    arms), and ``updates`` the total updates the coordinator
+    incorporated across the run — the denominator of the per-update
+    incast metric the table reports."""
+    rows = []
+    for e in entries:
+        meta, f = e.get("meta", {}), e.get("final", {})
+        if "arm" not in meta or e.get("topology") is None:
+            continue
+        isl = e.get("series", {}).get("bytes_isl_cum",
+                                      {"values": []})["values"]
+        rows.append(dict(arm=meta["arm"], topology=e.get("topology"),
+                         scenario=e.get("scenario"),
+                         rounds=f.get("rounds"), error=f.get("e_K"),
+                         bytes_gs=f.get("bytes_up"),
+                         bytes_isl=isl[-1] if isl else 0.0,
+                         updates=f.get("n_active", 0) or 0,
+                         lost=f.get("n_lost", 0) or 0))
+    return rows
+
+
 # ---------------------------------------------------------------------------
 # live watch (reader-side tail of a growing trace)
 # ---------------------------------------------------------------------------
@@ -280,13 +308,11 @@ def run_canonical(name: str, *, ef: bool = True, loss_robust: bool = True,
     import jax
     import jax.numpy as jnp
 
+    from ..api import Experiment
     from ..core.compression import UniformQuantizer
     from ..core.error_feedback import EFChannel
     from ..core.fedlt import FedLT, optimality_error
-    from ..core.fedlt_sat import SpaceRunner
     from ..data.logistic import generate, make_local_loss, solve_global
-    from ..sim import Engine, get_scenario
-    from . import tracing
 
     cfg = CANONICAL[name]
     n_agents = cfg.get("n_agents", 100)
@@ -312,20 +338,13 @@ def run_canonical(name: str, *, ef: bool = True, loss_robust: bool = True,
     if cfg["mode"] == "async":
         runner_kw.update(mode="async", buffer_size=cfg["buffer_size"],
                          staleness_alpha=0.5)
-    runner = SpaceRunner(
-        Engine(get_scenario(cfg["scenario"]), seed=CANONICAL_SEED),
-        **runner_kw)
-    st = alg.init(jnp.zeros((dim,)), n_agents)
+    exp = Experiment(cfg["scenario"], alg, seed=CANONICAL_SEED,
+                     meta=dict(canonical=name), **runner_kw)
+    st = exp.init(jnp.zeros((dim,)), n_agents)
     err = lambda s: float(optimality_error(s.x, x_star))  # noqa: E731
-    with tracing(canonical=name, scenario=cfg["scenario"],
-                 algorithm="FedLT", compressor="quant10",
-                 channel=(f"flat-{cfg['loss']}" if cfg["loss"] is not None
-                          else "lossless"),
-                 mode=cfg["mode"]) as trc:
-        runner.run(alg, st, data, rounds,
+    return exp.run(st, data, rounds,
                    jax.random.PRNGKey(100 + CANONICAL_SEED),
-                   error_fn=err, log_every=1)
-        return trc.records()
+                   error_fn=err, log_every=1, trace=True).records
 
 
 def gate_records(name: str, records: Sequence[dict], reference: dict,

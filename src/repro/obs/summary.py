@@ -26,7 +26,11 @@ from .trace import HOST_FIELDS
 # the deterministic engine-emitted kinds: identical for any two engines
 # that produced the same Delivery timeline, regardless of fast/oracle
 # internals, host timing, or channel implementation details
-DIFF_KINDS = ("round", "delivery", "arq", "cohort", "async_run")
+# (head_elect: per-plane cluster-head elections under in-orbit
+# aggregation topologies — a pure function of the contact plan, so fast
+# and oracle must agree on it too)
+DIFF_KINDS = ("round", "delivery", "arq", "cohort", "async_run",
+              "head_elect")
 
 # fields legitimately differing between equivalent traces: host clocks
 # and the engine tag ("fast"/"oracle") on round records

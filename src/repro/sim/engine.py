@@ -65,6 +65,11 @@ class Scenario:
     lookahead: float = 7200.0   # scheduling horizon per round
     dt: float = 10.0            # contact-plan grid resolution
     channel: Optional[object] = None  # repro.channel.ChannelModel or None
+    # how updates reach the ground (repro.sim.topology): None ≡ "direct"
+    # (per-satellite uplinks, the historical behavior), "plane" (per-plane
+    # convergecast to an elected cluster head), "gossip" (plane + paired
+    # inter-head merge) or a Topology instance
+    topology: Optional[object] = None
 
     def compute_of(self, sat: int) -> float:
         if np.ndim(self.compute_time) == 0:
@@ -168,6 +173,13 @@ class RoundResult:
     deliveries: List[Delivery]
     scheduled: np.ndarray       # bool (S,) — what the policy planned
     t0: float = 0.0
+    # in-orbit aggregation (repro.sim.topology) — direct rounds keep the
+    # defaults, so their serialization and downstream accounting are
+    # unchanged:
+    bytes_isl: float = 0.0      # wire bytes spent on ISL hops this round
+    # uplinking head -> every satellite its merged wire sums (None: direct)
+    merged: Optional[Dict[int, Tuple[int, ...]]] = None
+    heads: Optional[Dict[int, int]] = None   # plane -> elected head
 
     def cohorts(self) -> List[Cohort]:
         """Per-(station, contact-window) delivery cohorts (see
@@ -176,21 +188,37 @@ class RoundResult:
 
     def to_dict(self) -> dict:
         """JSON-stable serialization: masks as bool lists, deliveries via
-        :meth:`Delivery.to_dict` (round-trips through :meth:`from_dict`)."""
-        return {"mask": [bool(b) for b in self.mask],
-                "duration": float(self.duration),
-                "deliveries": [d.to_dict() for d in self.deliveries],
-                "scheduled": [bool(b) for b in self.scheduled],
-                "t0": float(self.t0)}
+        :meth:`Delivery.to_dict` (round-trips through :meth:`from_dict`).
+        Aggregation fields only appear on plane-topology rounds, so direct
+        rounds serialize exactly as they always have."""
+        out = {"mask": [bool(b) for b in self.mask],
+               "duration": float(self.duration),
+               "deliveries": [d.to_dict() for d in self.deliveries],
+               "scheduled": [bool(b) for b in self.scheduled],
+               "t0": float(self.t0)}
+        if self.merged is not None:
+            out["bytes_isl"] = float(self.bytes_isl)
+            out["merged"] = {str(h): [int(s) for s in ms]
+                             for h, ms in self.merged.items()}
+            out["heads"] = {str(p): int(h)
+                            for p, h in (self.heads or {}).items()}
+        return out
 
     @classmethod
     def from_dict(cls, d: dict) -> "RoundResult":
+        merged = d.get("merged")
         return cls(mask=np.asarray(d["mask"], dtype=bool),
                    duration=d["duration"],
                    deliveries=[Delivery.from_dict(x)
                                for x in d["deliveries"]],
                    scheduled=np.asarray(d["scheduled"], dtype=bool),
-                   t0=d["t0"])
+                   t0=d["t0"],
+                   bytes_isl=d.get("bytes_isl", 0.0),
+                   merged=None if merged is None else {
+                       int(h): tuple(ms) for h, ms in merged.items()},
+                   heads=None if merged is None else {
+                       int(p): int(h)
+                       for p, h in d.get("heads", {}).items()})
 
 
 # ---------------------------------------------------------------------------
@@ -243,14 +271,38 @@ def _emit_round_trace(trc, res: "RoundResult", engine: str, k: int) -> None:
     if res.deliveries:
         mtr.histogram("lost_frac", lo=0.0).observe(
             n_lost / len(res.deliveries))
+    # n_delivered counts delivered *wires* (delivery records), which for
+    # direct rounds equals mask.sum() — each scheduled satellite uplinks
+    # at most once — and for plane rounds counts head uplinks, keeping
+    # the check() count invariant engine-agnostic; the member count rides
+    # on the plane extras below
+    n_ok = sum(bool(d.delivered) for d in res.deliveries)
+    extra = {}
+    if res.merged is not None:
+        extra = dict(topology="plane", bytes_isl=float(res.bytes_isl),
+                     n_members_delivered=int(res.mask.sum()))
     trc.event("round", round=k, t0=float(res.t0),
               duration=float(res.duration),
               n_scheduled=int(res.scheduled.sum()),
-              n_delivered=int(res.mask.sum()), n_lost=n_lost,
-              bytes_air=bytes_air, engine=engine)
+              n_delivered=n_ok, n_lost=n_lost,
+              bytes_air=bytes_air, engine=engine, **extra)
     trc.series("bytes_air", k, bytes_air)
     if res.deliveries:
         trc.series("lost_frac_air", k, n_lost / len(res.deliveries))
+    if res.merged is not None:
+        # plane-topology extras: the ISL/GS byte split plus one election
+        # record per plane with a head — deterministic plan output, so
+        # fast and oracle traces agree (head_elect is a DIFF kind)
+        mtr.counter("bytes_isl").add(float(res.bytes_isl))
+        trc.series("bytes_isl", k, float(res.bytes_isl))
+        trc.series("bytes_gs", k, bytes_air)
+        uplinker_of = {s: h for h, ms in res.merged.items() for s in ms}
+        for p in sorted(res.heads or {}):
+            h = res.heads[p]
+            trc.event("head_elect", round=k, plane=int(p), head=int(h),
+                      uplinker=int(uplinker_of.get(h, h)),
+                      n_merged=len(res.merged.get(
+                          uplinker_of.get(h, h), ())))
 
 
 def _emit_async_trace(trc, deliveries: Sequence[Delivery], engine: str,
@@ -318,9 +370,12 @@ class Engine:
 
     def __init__(self, scenario: Scenario, policy=None, seed: int = 0,
                  fast: bool = True):
+        from .topology import check_plane_compatible, make_topology
         self.scenario = scenario
         self.seed = seed
         self.fast = bool(fast)
+        self.topology = make_topology(scenario.topology)
+        check_plane_compatible(scenario, self.topology)
         self.channel = scenario.channel   # repro.channel.ChannelModel | None
         self.plan = ContactPlan(scenario.walker, scenario.stations,
                                 horizon=max(2 * scenario.lookahead, 7200.0),
@@ -411,6 +466,20 @@ class Engine:
         if self.plan.horizon != old:
             self._refresh_blocked()
 
+    def install_channel(self, channel) -> None:
+        """Install (or clear) a lossy channel post-construction.
+
+        Mutating ``engine.channel`` directly is a footgun: the fast
+        path's :class:`~repro.sim.fastpath.ChannelCache` may already have
+        memoized ARQ plans / estimates for the previous channel, and the
+        blocked-window mask may carry its conjunction blackouts.  This is
+        the supported install path — it drops the memo wholesale and
+        recomputes the mask.  (:class:`repro.core.fedlt_sat.SpaceRunner`
+        and :class:`repro.api.Experiment` route through here.)"""
+        self.channel = channel
+        self._chan_cache = None           # drop memoized plans/estimates
+        self._refresh_blocked()           # re-layer conjunction blackouts
+
     def usable_window(self, sat: int, t: float
                       ) -> Optional[Tuple[float, float, int]]:
         """Earliest non-blocked window with ``set > t`` across stations."""
@@ -482,8 +551,13 @@ class Engine:
     # -- synchronous mode --------------------------------------------------
     def run_round(self, t0: float, msg_bytes: float) -> RoundResult:
         """One synchronous round (see the class docstring).  Dispatches
-        to the vectorized fast path unless ``fast=False``."""
-        if self.fast:
+        on the topology first (plane rounds run the in-orbit aggregation
+        driver in :mod:`repro.sim.topology`), then to the vectorized fast
+        path unless ``fast=False``."""
+        if self.topology.kind != "direct":
+            from .topology import run_round_plane
+            res = run_round_plane(self, t0, msg_bytes)
+        elif self.fast:
             from .fastpath import run_round_fast
             res = run_round_fast(self, t0, msg_bytes)
         else:
@@ -605,6 +679,12 @@ class Engine:
 
         Dispatches to the vectorized fast path unless ``fast=False``.
         """
+        if self.topology.kind != "direct":
+            raise ValueError(
+                f"run_async supports topology='direct' only — plane "
+                f"aggregation needs a plane-synchronous merge point, which "
+                f"the free-running mode has no analogue of (topology="
+                f"{self.topology.name!r})")
         if self.fast:
             from .fastpath import run_async_fast
             out = run_async_fast(self, t0, msg_bytes, n_deliveries,

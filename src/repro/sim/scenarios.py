@@ -174,6 +174,54 @@ def _conjunction_outage() -> Scenario:
                                                      duration=1500.0)))
 
 
+# ---------------------------------------------------------------------------
+# in-orbit aggregation scenarios (repro.sim.topology) — per-plane
+# convergecast to elected cluster heads; one merged wire per plane (or per
+# head pair, under gossip) crosses the GS link instead of one per sat
+# ---------------------------------------------------------------------------
+
+@register("plane-agg-walker")
+def _plane_agg_walker() -> Scenario:
+    # the seed geometry with per-plane aggregation: ≤ 10 head uplinks per
+    # round instead of k_direct + relays, every member of a live plane
+    # participating — the topology-equivalence smoke scenario
+    return Scenario(name="plane-agg-walker", walker=Walker(),
+                    stations=(KIRUNA,), topology="plane")
+
+
+@register("plane-agg-gossip")
+def _plane_agg_gossip() -> Scenario:
+    # plane aggregation + paired inter-head merge: ~half the uplinks again,
+    # at the cost of the inter-head ISL transfer
+    return Scenario(name="plane-agg-gossip", walker=Walker(),
+                    stations=(KIRUNA,), topology="gossip")
+
+
+@register("plane-agg-lossy")
+def _plane_agg_lossy() -> Scenario:
+    # plane aggregation over a harsh erasure channel: one segment per
+    # typical message and no retransmission, so ~25 % of HEAD wires are
+    # destroyed — each loss reverts a whole plane's worth of updates,
+    # the stress case for loss-robust EF under mid-route aggregation
+    return Scenario(name="plane-agg-lossy", walker=Walker(),
+                    stations=(KIRUNA,), topology="plane",
+                    channel=ChannelModel(
+                        loss=0.25,
+                        arq=SelectiveRepeatARQ(seg_bytes=16384,
+                                               max_rounds=1)))
+
+
+@register("mega-1000-plane")
+def _mega_1000_plane() -> Scenario:
+    # the mega-1000 regime aggregated in orbit: ≤ 20 head uplinks carry
+    # all 1000 updates — the bytes-to-ground headline of
+    # benchmarks/table_plane_agg.py
+    return Scenario(name="mega-1000-plane",
+                    walker=Walker(n_sats=1000, n_planes=20),
+                    stations=(KIRUNA, SVALBARD, INUVIK),
+                    max_hops=6, topology="plane")
+
+
 @register("mega-1000-lossy")
 def _mega_1000_lossy() -> Scenario:
     # scale + loss combined: the mega-1000 regime over a flat 25 %

@@ -28,6 +28,8 @@ SIMWIRE_MODULES = {
     "test_channel",
     "test_obs",
     "test_obs_ledger",
+    "test_topology",
+    "test_api",
 }
 
 

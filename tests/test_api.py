@@ -1,0 +1,177 @@
+"""repro.api.Experiment facade: parity with hand construction, topology
+selection, the channel-install ChannelCache invalidation regression, and
+trace/ledger wiring."""
+import dataclasses
+import os
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.api import (Experiment, describe_channel, describe_compressor)
+from repro.channel import ChannelModel, SelectiveRepeatARQ
+from repro.core.compression import RandD, TopK, UniformQuantizer
+from repro.core.error_feedback import EFChannel
+from repro.core.fedlt import FedLT
+from repro.core.fedlt_sat import SpaceRunner
+from repro.data.logistic import generate, make_local_loss
+from repro.sim import Engine, get_scenario
+
+QUANT = UniformQuantizer(levels=10, vmin=-1, vmax=1, clip=True)
+DIM = 12
+
+
+def _problem(n_agents=100):
+    data, _ = generate(jax.random.PRNGKey(0), n_agents=n_agents, m=16,
+                       dim=DIM)
+    loss = make_local_loss(eps=50.0, n_agents=n_agents)
+    alg = FedLT(loss=loss, n_epochs=1, gamma=0.005, rho=20.0,
+                uplink=EFChannel(QUANT), downlink=EFChannel(QUANT))
+    return data, alg
+
+
+def test_facade_matches_hand_construction():
+    """Experiment.run must reproduce SpaceRunner-by-hand bit-for-bit
+    (the facade is delegation, not a reimplementation)."""
+    data, alg = _problem()
+    exp = Experiment.from_scenario("walker-kiruna", algorithm=alg,
+                                   compressor=QUANT)
+    st = exp.init(jnp.zeros((DIM,)), 100)
+    res = exp.run(st, data, 4, jax.random.PRNGKey(1))
+
+    runner = SpaceRunner(Engine(get_scenario("walker-kiruna"), seed=0),
+                         compressor=QUANT)
+    st2 = alg.init(jnp.zeros((DIM,)), 100)
+    _, logs2 = runner.run(alg, st2, data, 4, jax.random.PRNGKey(1))
+    assert [l.bytes_up for l in res.logs] == [l.bytes_up for l in logs2]
+    assert [l.n_active for l in res.logs] == [l.n_active for l in logs2]
+    assert [l.time for l in res.logs] == [l.time for l in logs2]
+
+
+def test_facade_topology_selection():
+    data, alg = _problem()
+    exp = Experiment("walker-kiruna", alg, compressor=QUANT,
+                     topology="plane")
+    assert exp.topology_name == "plane"
+    assert exp.engine.topology.kind == "plane"
+    st = exp.init(jnp.zeros((DIM,)), 100)
+    res = exp.run(st, data, 3, jax.random.PRNGKey(1))
+    assert sum(l.bytes_isl for l in res.logs) > 0
+    # registered plane scenario == direct scenario + topology override
+    exp2 = Experiment("plane-agg-walker", alg, compressor=QUANT)
+    assert exp2.topology_name == "plane"
+
+
+def test_facade_engine_passthrough_and_guards():
+    data, alg = _problem()
+    eng = Engine(get_scenario("plane-agg-walker"))
+    exp = Experiment(None, alg, engine=eng, compressor=QUANT)
+    assert exp.engine is eng and exp.topology_name == "plane"
+    with pytest.raises(ValueError, match="carries topology"):
+        Experiment(None, alg, engine=eng, topology="direct")
+    with pytest.raises(ValueError, match="scenario"):
+        Experiment(None, alg)
+
+
+def test_ledger_meta_labels():
+    _, alg = _problem()
+    assert describe_compressor(QUANT) == "quant10"
+    assert describe_compressor(TopK(fraction=0.1)) == "topk0.1"
+    assert describe_compressor(RandD(fraction=0.2)) == "rand0.2"
+    assert describe_compressor(None) == "none"
+    assert describe_channel(None) == "lossless"
+    ch = ChannelModel(loss=0.3,
+                      arq=SelectiveRepeatARQ(seg_bytes=4096, max_rounds=1))
+    assert describe_channel(ch) == "flat-0.3"
+    exp = Experiment("walker-kiruna", alg, compressor=QUANT, channel=ch,
+                     meta=dict(arm="x", compressor="override"))
+    m = exp.ledger_meta()
+    assert m["scenario"] == "walker-kiruna"
+    assert m["algorithm"] == "FedLT"
+    assert m["channel"] == "flat-0.3"
+    assert m["topology"] == "direct" and m["mode"] == "sync"
+    assert m["arm"] == "x"
+    assert m["compressor"] == "override"     # caller meta wins
+
+
+def test_facade_trace_and_ledger(tmp_path):
+    from repro.obs.ledger import load_ledger
+
+    data, alg = _problem()
+    lp = os.path.join(str(tmp_path), "ledger.jsonl")
+    exp = Experiment("plane-agg-walker", alg, compressor=QUANT)
+    st = exp.init(jnp.zeros((DIM,)), 100)
+    res = exp.run(st, data, 3, jax.random.PRNGKey(1), ledger=lp)
+    assert res.records is not None
+    entries = load_ledger(lp)
+    assert len(entries) == 1
+    assert entries[0]["run_id"] == res.run_id
+    assert entries[0]["topology"] == "plane"
+    assert entries[0]["compressor"] == "quant10"
+    # untraced run has nothing to ingest
+    res2 = exp.run(exp.init(jnp.zeros((DIM,)), 100), data, 1,
+                   jax.random.PRNGKey(1))
+    assert res2.records is None
+    with pytest.raises(ValueError, match="no trace records"):
+        res2.ingest(lp)
+
+
+def test_facade_defers_to_open_tracer():
+    """Inside an already-open tracing() scope the facade must not try to
+    nest a second tracer — events land in the caller's scope."""
+    from repro import obs
+
+    data, alg = _problem()
+    exp = Experiment("walker-kiruna", alg, compressor=QUANT)
+    with obs.tracing(scenario="outer") as trc:
+        res = exp.run(exp.init(jnp.zeros((DIM,)), 100), data, 2,
+                      jax.random.PRNGKey(1), trace=True)
+        n = len(trc.records())
+    assert res.records is None
+    assert n > 2
+
+
+def test_install_channel_invalidates_chan_cache():
+    """The historical footgun: SpaceRunner(channel=...) used to mutate
+    engine.channel AFTER the fast path's ChannelCache had memoized plans
+    for the old channel, silently replaying lossless ARQ plans under a
+    lossy channel.  install_channel must drop the memo so post-install
+    rounds are bit-identical to a fresh engine built with the channel."""
+    sc = get_scenario("walker-kiruna")
+    msg = 120e6 / 8 * 0.01
+    eng = Engine(sc)
+    # memoize: run rounds WITHOUT a channel so the cache holds
+    # lossless-channel estimates
+    t = 0.0
+    for _ in range(2):
+        t += eng.run_round(t, msg).duration
+    assert eng._chan_cache is not None
+    ch = ChannelModel(loss=0.5,
+                      arq=SelectiveRepeatARQ(seg_bytes=16384, max_rounds=1))
+    eng.install_channel(ch)
+    assert eng._chan_cache is None           # memo dropped
+    fresh = Engine(dataclasses.replace(sc, channel=ch))
+    t_a = t_b = 0.0
+    lost = 0
+    for _ in range(4):
+        ra, rb = eng.run_round(t_a, msg), fresh.run_round(t_b, msg)
+        assert ra.deliveries == rb.deliveries
+        lost += sum(not d.delivered for d in ra.deliveries)
+        t_a += ra.duration
+        t_b += rb.duration
+    assert lost > 0, "channel install had no effect on deliveries"
+
+
+def test_space_runner_install_goes_through_engine(monkeypatch):
+    """SpaceRunner(channel=...) must route through install_channel, not
+    bare attribute mutation."""
+    eng = Engine(get_scenario("walker-kiruna"))
+    calls = []
+    orig = Engine.install_channel
+    monkeypatch.setattr(Engine, "install_channel",
+                        lambda self, ch: (calls.append(ch),
+                                          orig(self, ch))[1])
+    ch = ChannelModel(loss=0.1,
+                      arq=SelectiveRepeatARQ(seg_bytes=4096, max_rounds=1))
+    SpaceRunner(eng, channel=ch)
+    assert calls == [ch]

@@ -132,3 +132,87 @@ if HAVE_HYPOTHESIS:
                                         clip=True))
         lhs, rhs = _run_channel(ch, msgs)
         np.testing.assert_allclose(lhs, rhs, rtol=0, atol=1e-4)
+
+
+# -- GroupedEFChannel: residuals at aggregation heads ----------------------
+
+def test_grouped_ef_telescopes_per_group():
+    """Per-group telescoping under churning membership AND head-wire
+    loss with loss-robust revert: landed wires + final cache == every
+    message each group's members ever offered."""
+    from repro.core.error_feedback import GroupedEFChannel
+
+    ch = GroupedEFChannel(QUANT)
+    N, G, D = 12, 3, 7
+    rng = np.random.default_rng(3)
+    cache = ch.init_cache(jnp.zeros((N, D)), G)
+    total_msgs = np.zeros((G, D))
+    total_landed = np.zeros((G, D))
+    for k in range(30):
+        msgs = jnp.asarray(rng.normal(scale=0.1, size=(N, D))
+                           .astype(np.float32))
+        groups = jnp.asarray(rng.integers(-1, G, size=N), jnp.int32)
+        wire, cache = ch.send(jax.random.PRNGKey(k), msgs, cache,
+                              groups, G)
+        total_msgs += np.asarray(ch.group_sum(msgs, groups, G))
+        lost = jnp.asarray(rng.random(G) < 0.3)
+        cache = ch.revert(cache, wire, lost)
+        total_landed += np.asarray(wire) * (~np.asarray(lost))[:, None]
+    np.testing.assert_allclose(total_landed + np.asarray(cache),
+                               total_msgs, rtol=0, atol=1e-4)
+
+
+def test_grouped_ef_matches_per_group_efchannel():
+    """Grouped send == a plain EFChannel driven on the group sums: the
+    head placement is EXACTLY leaf EF applied after the merge."""
+    from repro.core.error_feedback import GroupedEFChannel
+
+    ch, ef = GroupedEFChannel(QUANT), EFChannel(QUANT)
+    N, G, D = 10, 4, 5
+    rng = np.random.default_rng(4)
+    cache_g = ch.init_cache(jnp.zeros((N, D)), G)
+    cache_e = jnp.zeros((G, D))
+    for k in range(8):
+        msgs = jnp.asarray(rng.normal(scale=0.2, size=(N, D))
+                           .astype(np.float32))
+        groups = jnp.asarray(rng.integers(0, G, size=N), jnp.int32)
+        kk = jax.random.PRNGKey(100 + k)
+        w_g, cache_g = ch.send(kk, msgs, cache_g, groups, G)
+        w_e, cache_e = ef.send(kk, ch.group_sum(msgs, groups, G), cache_e)
+        assert np.array_equal(np.asarray(w_g), np.asarray(w_e))
+        assert np.array_equal(np.asarray(cache_g), np.asarray(cache_e))
+
+
+def test_grouped_ef_disabled_and_masking():
+    from repro.core.error_feedback import GroupedEFChannel
+
+    N, G, D = 6, 2, 3
+    ch0 = GroupedEFChannel(Identity(), enabled=False)
+    cache = ch0.init_cache(jnp.zeros((N, D)), G)
+    msgs = jnp.arange(N * D, dtype=jnp.float32).reshape(N, D)
+    groups = jnp.asarray([0, 0, 1, 1, -1, -1], jnp.int32)
+    wire, cache2 = ch0.send(jax.random.PRNGKey(0), msgs, cache, groups, G)
+    assert np.array_equal(np.asarray(cache), np.asarray(cache2))
+    # -1 members contribute nothing; identity wire == exact group sums
+    expect = np.stack([np.asarray(msgs[:2]).sum(0),
+                       np.asarray(msgs[2:4]).sum(0)])
+    np.testing.assert_array_equal(np.asarray(wire), expect)
+
+
+def test_grouped_ef_revert_restores_corrected_state():
+    """revert(new_cache, wire, lost) must restore cache + wire ==
+    corrected for lost groups and leave landed groups untouched."""
+    from repro.core.error_feedback import GroupedEFChannel
+
+    ch = GroupedEFChannel(QUANT)
+    N, G, D = 8, 2, 4
+    rng = np.random.default_rng(5)
+    msgs = jnp.asarray(rng.normal(size=(N, D)).astype(np.float32))
+    groups = jnp.asarray(rng.integers(0, G, size=N), jnp.int32)
+    cache0 = ch.init_cache(jnp.zeros((N, D)), G)
+    wire, cache1 = ch.send(jax.random.PRNGKey(1), msgs, cache0, groups, G)
+    corrected = np.asarray(ch.group_sum(msgs, groups, G))  # cache0 == 0
+    lost = jnp.asarray([True, False])
+    reverted = np.asarray(ch.revert(cache1, wire, lost))
+    np.testing.assert_allclose(reverted[0], corrected[0], atol=1e-6)
+    np.testing.assert_array_equal(reverted[1], np.asarray(cache1)[1])

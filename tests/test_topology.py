@@ -1,0 +1,290 @@
+"""In-orbit aggregation topologies (repro.sim.topology).
+
+The two contracts this file enforces:
+
+1. ``topology="direct"`` is bit-for-bit identical to a scenario without
+   the field — Delivery timelines, byte accounting, AND the obs trace
+   (``repro.obs.summary.diff`` clean), so existing results can't shift.
+2. Plane/gossip rounds keep the fast==oracle equivalence: the vectorized
+   fold and the literal heapq event machine produce identical
+   RoundResults, including under a lossy channel destroying head wires.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.constellation.orbits import GroundStation, Walker
+from repro.sim import Engine, Scenario, get_scenario, make_topology
+from repro.sim.routing import Router
+from repro.sim.topology import (DIRECT, GOSSIP, PLANE, Topology,
+                                _plane_arcs, check_plane_compatible,
+                                plan_plane_round)
+
+MSG = 120e6 / 8 * 0.01  # ~150 kB — same order as the engine test suite
+
+KIRUNA = GroundStation()
+
+
+def _pair(name, rounds=5, msg=MSG):
+    """Run the same scenario on the fast and oracle engines; assert
+    bit-identical RoundResults; return the fast results."""
+    sc = get_scenario(name)
+    ef, eo = Engine(sc, fast=True), Engine(sc, fast=False)
+    t_f = t_o = 0.0
+    out = []
+    for k in range(rounds):
+        rf, ro = ef.run_round(t_f, msg), eo.run_round(t_o, msg)
+        assert rf.deliveries == ro.deliveries, f"round {k} diverged"
+        assert rf.duration == ro.duration
+        assert (rf.mask == ro.mask).all()
+        assert (rf.scheduled == ro.scheduled).all()
+        assert rf.bytes_isl == ro.bytes_isl
+        assert rf.merged == ro.merged and rf.heads == ro.heads
+        t_f += rf.duration
+        t_o += ro.duration
+        out.append(rf)
+    return out
+
+
+# -- resolution -------------------------------------------------------------
+
+def test_make_topology_resolution():
+    assert make_topology(None) is DIRECT
+    assert make_topology("direct") is DIRECT
+    assert make_topology("plane") is PLANE
+    assert make_topology("gossip") is GOSSIP
+    assert make_topology(PLANE) is PLANE
+    assert GOSSIP.name == "gossip" and PLANE.name == "plane"
+    assert Topology("plane", gossip=True).name == "gossip"
+    with pytest.raises(ValueError, match="unknown topology"):
+        make_topology("mesh")
+    with pytest.raises(ValueError):
+        make_topology(42)
+
+
+def test_plane_needs_regular_walker():
+    ragged = Scenario(walker=Walker(n_sats=10, n_planes=3),
+                      stations=(KIRUNA,))
+    check_plane_compatible(ragged, DIRECT)       # direct: anything goes
+    with pytest.raises(ValueError, match="regular"):
+        check_plane_compatible(ragged, PLANE)
+    with pytest.raises(ValueError, match="regular"):
+        Engine(dataclasses.replace(ragged, topology="plane"))
+
+
+def test_plane_arcs_partition_the_ring():
+    spp = 7
+    for head in range(spp):
+        up, down = _plane_arcs(head, plane=0, spp=spp)
+        # every non-head member exactly once, head in neither arc
+        assert sorted(up + down + [head]) == list(range(spp))
+        # far→near: the last element of each arc is adjacent to the head
+        for chain in (up, down):
+            if chain:
+                assert min((chain[-1] - head) % spp,
+                           (head - chain[-1]) % spp) == 1
+
+
+# -- direct passthrough ------------------------------------------------------
+
+def test_direct_topology_bit_identical():
+    """topology='direct' must not perturb the existing engine AT ALL:
+    same deliveries, same trace records (obs diff clean)."""
+    from repro import obs
+    from repro.obs.summary import diff
+
+    sc = get_scenario("walker-kiruna")
+    sc_d = dataclasses.replace(sc, topology="direct")
+    traces = []
+    for scenario in (sc, sc_d):
+        eng = Engine(scenario)
+        with obs.tracing() as trc:
+            t = 0.0
+            for _ in range(4):
+                res = eng.run_round(t, MSG)
+                t += res.duration
+            recs = trc.records()
+        traces.append(recs)
+        assert res.merged is None and res.heads is None
+        assert res.bytes_isl == 0.0
+    equal, report = diff(traces[0], traces[1])
+    assert equal, report
+
+
+# -- plane / gossip equivalence ---------------------------------------------
+
+def test_plane_fast_matches_oracle():
+    results = _pair("plane-agg-walker")
+    assert any(r.deliveries for r in results)
+    for r in results:
+        assert r.merged is not None
+        # only heads deliver; delivered mask covers whole merged groups
+        for d in r.deliveries:
+            assert d.sat in r.merged
+            if d.delivered:
+                assert r.mask[list(r.merged[d.sat])].all()
+
+
+def test_gossip_fast_matches_oracle():
+    results = _pair("plane-agg-gossip")
+    sc = get_scenario("plane-agg-gossip")
+    spp = sc.walker.sats_per_plane
+    # gossip merges pairs of planes: some wire must sum 2 planes' members
+    assert any(len(m) == 2 * spp
+               for r in results for m in r.merged.values())
+
+
+def test_lossy_plane_fast_matches_oracle():
+    results = _pair("plane-agg-lossy", rounds=12)
+    lost = sum(1 for r in results for d in r.deliveries if not d.delivered)
+    assert lost > 0, "lossy plane scenario produced no lost head wires"
+
+
+def test_small_mega_plane_fast_matches_oracle():
+    sc = Scenario(name="mini-mega-plane",
+                  walker=Walker(n_sats=120, n_planes=12),
+                  stations=(KIRUNA,), topology="plane")
+    ef, eo = Engine(sc, fast=True), Engine(sc, fast=False)
+    t = 0.0
+    for _ in range(3):
+        rf, ro = ef.run_round(t, MSG), eo.run_round(t, MSG)
+        assert rf.deliveries == ro.deliveries
+        assert rf.merged == ro.merged
+        t += rf.duration
+
+
+# -- plan properties ---------------------------------------------------------
+
+def test_election_deterministic_and_well_formed():
+    eng = Engine(get_scenario("plane-agg-walker"))
+    p1 = plan_plane_round(eng, 0.0)
+    p2 = plan_plane_round(eng, 0.0)
+    assert p1.heads == p2.heads and p1.merged == p2.merged
+    assert p1.uplinkers == p2.uplinkers and p1.pairs == p2.pairs
+    spp = eng.scenario.walker.sats_per_plane
+    for plane, head in p1.heads.items():
+        assert plane * spp <= head < (plane + 1) * spp
+    # each uplinker's merged set is disjoint and plane-aligned
+    seen = set()
+    for h, members in p1.merged.items():
+        assert h in members
+        assert not (seen & set(members))
+        seen |= set(members)
+        assert len(members) % spp == 0
+
+
+def test_bytes_isl_accounting():
+    """Full participation: every plane elects a head, so the convergecast
+    moves exactly (n_sats - n_planes) messages; gossip adds the
+    inter-head hops on top."""
+    sc = get_scenario("plane-agg-walker")
+    w = sc.walker
+    res = Engine(sc).run_round(0.0, MSG)
+    if len(res.heads) == w.n_planes:        # all planes lit
+        assert res.bytes_isl == (w.n_sats - w.n_planes) * MSG
+    res_g = Engine(get_scenario("plane-agg-gossip")).run_round(0.0, MSG)
+    assert res_g.bytes_isl > res.bytes_isl - 1e-9
+    # gossip halves (±1 odd plane) the ground-station uplink count
+    assert len(res_g.deliveries) <= len(res.deliveries) // 2 + 1
+
+
+def test_round_result_roundtrips_with_aggregation_fields():
+    from repro.sim.engine import RoundResult
+    res = Engine(get_scenario("plane-agg-walker")).run_round(0.0, MSG)
+    back = RoundResult.from_dict(res.to_dict())
+    assert back.deliveries == res.deliveries
+    assert back.merged == res.merged and back.heads == res.heads
+    assert back.bytes_isl == res.bytes_isl
+    # direct rounds keep emitting the seed dict shape (no agg keys)
+    res_d = Engine(get_scenario("walker-kiruna")).run_round(0.0, MSG)
+    d = res_d.to_dict()
+    assert "merged" not in d and "bytes_isl" not in d
+
+
+# -- mode guards -------------------------------------------------------------
+
+def test_plane_mode_guards():
+    from repro.core.fedlt_sat import SpaceRunner
+    eng = Engine(get_scenario("plane-agg-walker"))
+    with pytest.raises(ValueError, match="async"):
+        SpaceRunner(eng, mode="async")
+    with pytest.raises(ValueError, match="cohort"):
+        SpaceRunner(eng, measure="cohort")
+    with pytest.raises(ValueError, match="topology"):
+        eng.run_async(0.0, MSG, n_deliveries=10)
+
+
+# -- SpaceRunner integration -------------------------------------------------
+
+def test_lossy_plane_run_loss_robust():
+    """plane-agg-lossy end-to-end: head wires get destroyed, whole planes
+    revert, and loss-robust EF still converges to a finite error."""
+    from repro.core.compression import UniformQuantizer
+    from repro.core.error_feedback import EFChannel
+    from repro.core.fedlt import FedLT
+    from repro.core.fedlt_sat import SpaceRunner
+    from repro.data.logistic import generate, make_local_loss
+
+    n_agents, dim = 100, 12
+    data, _ = generate(jax.random.PRNGKey(0), n_agents=n_agents, m=16,
+                       dim=dim)
+    loss = make_local_loss(eps=50.0, n_agents=n_agents)
+    C = UniformQuantizer(levels=10, vmin=-1, vmax=1, clip=True)
+    alg = FedLT(loss=loss, n_epochs=1, gamma=0.005, rho=20.0,
+                uplink=EFChannel(C), downlink=EFChannel(C))
+    st = alg.init(jnp.zeros((dim,)), n_agents)
+    runner = SpaceRunner(Engine(get_scenario("plane-agg-lossy")),
+                         compressor=C)
+    st, logs = runner.run(alg, st, data, 10, jax.random.PRNGKey(2))
+    assert sum(l.n_lost for l in logs) > 0, "no head wires were lost"
+    assert sum(l.bytes_isl for l in logs) > 0
+    assert all(np.isfinite(l.bytes_up) for l in logs)
+    # lost counts are whole planes: multiples of sats_per_plane
+    spp = get_scenario("plane-agg-lossy").walker.sats_per_plane
+    for l in logs:
+        assert l.n_lost % spp == 0
+
+
+# -- router: plane-seam routes + mid-route window close ----------------------
+
+def test_router_seam_route():
+    """The +grid wraps across the seam (last plane ↔ plane 0): a same-slot
+    satellite in the last plane reaches a plane-0 gateway in ONE hop, not
+    n_planes-1 hops the long way round."""
+    w = Walker(n_sats=12, n_planes=3)
+    r = Router(w)
+    routes = r.routes_to_gateways([0], MSG)
+    seam_sat = (w.n_planes - 1) * w.sats_per_plane   # last plane, slot 0
+    assert routes[seam_sat].hops == 1
+    assert routes[seam_sat].path == (seam_sat, 0)
+    # max_hops bounds expansion
+    near = r.routes_to_gateways([0], MSG, max_hops=1)
+    assert seam_sat in near
+    assert all(rt.hops <= 1 for rt in near.values())
+
+
+def test_relay_window_close_refits_identically():
+    """Mid-route window close: with a message so large that uplinks
+    overflow the first usable window, relayed updates must refit into
+    later windows — and the fast path must do so exactly like the
+    oracle (the regression class: fast picks window W, oracle picks
+    W+1)."""
+    sc = get_scenario("walker-kiruna")
+    big = 120e6 / 8 * 2.0       # ~30 MB: gs_time comparable to a window
+    ef, eo = Engine(sc, fast=True), Engine(sc, fast=False)
+    t = 0.0
+    relayed, refit = 0, 0
+    for _ in range(4):
+        rf, ro = ef.run_round(t, big), eo.run_round(t, big)
+        assert rf.deliveries == ro.deliveries
+        for d in rf.deliveries:
+            relayed += d.hops > 0
+            # landed far past its window rise ⇒ the first window couldn't
+            # hold it and the engine refit into a later one
+            refit += d.t_done - d.window > 3 * sc.link.gs_time(big)
+        t += rf.duration
+    assert relayed > 0, "no multi-hop relays exercised"
+    assert refit > 0, "message size too small to force a window refit"
