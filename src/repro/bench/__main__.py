@@ -50,6 +50,18 @@ def emit_trace(directory: str) -> str:
             t += eng.run_round(t, msg).duration
         eng.run_async(0.0, msg, n_deliveries=50)
     print(f"wrote {path}")
+    # the same trajectory on the heapq oracle: CI perfdiffs the pair so
+    # every perf-gate run records WHERE the fast path spends its time
+    # relative to the reference engine (phase records included)
+    o_path = os.path.join(directory, "TRACE_mega-1000-oracle.jsonl")
+    o_eng = Engine(get_scenario("mega-1000"), fast=False)
+    with obs.tracing(o_path, scenario="mega-1000", source="repro.bench",
+                     engine="oracle"):
+        t = 0.0
+        for _ in range(2):
+            t += o_eng.run_round(t, msg).duration
+        o_eng.run_async(0.0, msg, n_deliveries=50)
+    print(f"wrote {o_path}")
     # fold the trace into the run ledger artifact next to the BENCH
     # files — every perf-gate run leaves a cross-run-comparable entry
     # behind, not just the raw timeline

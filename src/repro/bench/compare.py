@@ -15,11 +15,17 @@ baseline.  A GATED baseline metric that the fresh run failed to produce
 is itself a failure (the gate must not fail open when a benchmark breaks
 or is skipped).  Improvements beyond the tolerance are flagged as
 candidates for a baseline refresh (``python -m repro.bench --emit .``).
+
+When the gate trips and BOTH directories hold a trace with the same
+filename (``TRACE_*.jsonl[.gz]``), the failure report also runs
+:func:`repro.obs.prof.perfdiff` over each matching pair so the log names
+*which phase* moved, not just that something did.
 """
 from __future__ import annotations
 
 import argparse
 import dataclasses
+import glob
 import json
 import os
 import sys
@@ -121,6 +127,32 @@ def format_report(verdicts: List[Verdict], tol: float) -> str:
     return "\n".join(lines)
 
 
+def perfdiff_report(new_dir: str, base_dir: str, tol: float = 0.2) -> str:
+    """Phase-level localization for a tripped gate: perfdiff every trace
+    filename present in BOTH directories (baseline = A, fresh = B).
+    Purely diagnostic — returns "" when no pair matches or the traces
+    can't be read, never raises."""
+    try:
+        from ..obs import prof as _prof
+        from ..obs.trace import load as _load
+        new_traces = {os.path.basename(p) for pat in ("TRACE_*.jsonl",
+                                                      "TRACE_*.jsonl.gz")
+                      for p in glob.glob(os.path.join(new_dir, pat))}
+        base_traces = {os.path.basename(p) for pat in ("TRACE_*.jsonl",
+                                                       "TRACE_*.jsonl.gz")
+                       for p in glob.glob(os.path.join(base_dir, pat))}
+        out = []
+        for name in sorted(new_traces & base_traces):
+            d = _prof.perfdiff(_load(os.path.join(base_dir, name)),
+                               _load(os.path.join(new_dir, name)), tol=tol)
+            out.append(f"phase-level perfdiff for {name} "
+                       f"(A=baseline, B=fresh):")
+            out.append(_prof.render_perfdiff(d))
+        return "\n".join(out)
+    except Exception as exc:                      # pragma: no cover
+        return f"(perfdiff localization unavailable: {exc})"
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("new_dir", help="directory with freshly emitted "
@@ -134,6 +166,9 @@ def main(argv=None) -> int:
     print(format_report(verdicts, args.tol))
     if not passed:
         print("PERF GATE FAILED — gated metric regressed beyond tolerance")
+        diag = perfdiff_report(args.new_dir, args.baseline, args.tol)
+        if diag:
+            print(diag)
         return 1
     print("perf gate passed")
     return 0

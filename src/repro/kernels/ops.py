@@ -13,6 +13,7 @@ Disabled, the hook is one module attribute read and a ``None`` check.
 from __future__ import annotations
 
 import functools
+import time
 
 import jax
 
@@ -40,9 +41,25 @@ def _traced(fn):
         trc = _obs_active()
         if trc is None:
             return fn(*args, **kwargs)
-        with jax.profiler.TraceAnnotation(f"repro.kernels.{name}"), \
-                trc.span("kernel", name=name):
+        with jax.profiler.TraceAnnotation(f"repro.kernels.{name}"):
+            t0 = time.perf_counter()
             out = fn(*args, **kwargs)
+            dur = time.perf_counter() - t0
+        # same record Tracer.span would emit, but timed manually so the
+        # duration can also feed the phase profiler (kernel.<name>)
+        trc.raw({"kind": "kernel", "name": name,
+                 "t_host": t0 - trc._t0_host, "dur_host": dur})
+        trc.prof.add("kernel." + name, dur)
+        if trc.prof.sync_device:
+            # honest host/device split: the dispatch above only measures
+            # trace + launch time under JAX's async dispatch; this extra
+            # (opt-in, prof_sync meta) wait attributes device compute
+            t1 = time.perf_counter()
+            jax.block_until_ready(out)
+            dur_sync = time.perf_counter() - t1
+            trc.raw({"kind": "kernel", "name": name + "[device]",
+                     "t_host": t1 - trc._t0_host, "dur_host": dur_sync})
+            trc.prof.add("kernel." + name + "[device]", dur_sync)
         trc.metrics.counter("kernel_dispatches").add(1.0, name=name)
         return out
 

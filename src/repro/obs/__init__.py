@@ -29,7 +29,14 @@ Three layers:
   report renders cross-run tables and the bytes-to-ground vs e_K
   frontier, ``watch`` tails a live trace (reader-side only), and
   ``convgate`` gates fresh convergence curves against the committed
-  ``CONV_reference.json`` in CI.
+  ``CONV_reference.json`` in CI;
+* :mod:`repro.obs.prof` — the phase-attribution profiler: both engines
+  bracket their real stages (plan extension, assignment, window fits,
+  channel commits, batched routing, kernel dispatches) so ``prof``
+  renders per-phase self/total/p50/p99 with an explicit unattributed
+  residual, ``perfdiff`` names the phases behind a perf regression, and
+  ``bench-history`` tracks ``BENCH_*.json`` emissions over time with
+  regression-onset localization.
 
 Quickstart::
 
@@ -44,6 +51,9 @@ Quickstart::
     #        python -m repro.obs diff fast.jsonl oracle.jsonl
     #        python -m repro.obs check run.jsonl
     #        python -m repro.obs chrome run.jsonl -o run.perfetto.json
+    #        python -m repro.obs prof run.jsonl --flame run.folded
+    #        python -m repro.obs perfdiff old.jsonl new.jsonl
+    #        python -m repro.obs bench-history bench_out/BENCH_sim.json
 
 Paths ending in ``.gz`` read and write gzip-compressed; long runs can
 stream with bounded memory (``obs.tracing(path, stream_every=N)``).
@@ -55,6 +65,9 @@ attribute read per round / per kernel dispatch — enforced by the gated
 from .chrome import chrome_trace, write_chrome_trace
 from .ledger import ingest, load_ledger
 from .metrics import Counter, Histogram, Metrics
+from .prof import (PhaseAcc, attribution, collect, folded, ingest_bench,
+                   perfdiff, render_history, render_perfdiff,
+                   render_profile)
 from .report import convgate, render_frontier, render_report, watch
 from .summary import (check, diff, extract_series, render_rounds,
                       summarize, summarize_dict)
@@ -68,4 +81,6 @@ __all__ = [
     "ingest", "load_ledger", "render_report", "render_frontier",
     "watch", "convgate",
     "chrome_trace", "write_chrome_trace",
+    "PhaseAcc", "collect", "render_profile", "folded", "attribution",
+    "perfdiff", "render_perfdiff", "ingest_bench", "render_history",
 ]

@@ -8,6 +8,9 @@
     python -m repro.obs report [--ledger runs/ledger.jsonl] [--frontier]
     python -m repro.obs watch TRACE.jsonl [--total N] [--max-wait S]
     python -m repro.obs convgate [--reference CONV_reference.json]
+    python -m repro.obs prof TRACE.jsonl [--flame F] [--min-attribution Q]
+    python -m repro.obs perfdiff A.jsonl B.jsonl [--top N] [--tol T]
+    python -m repro.obs bench-history [BENCH_*.json ...] [--history H]
     python -m repro.obs --check TRACE.jsonl          # alias for `check`
 
 All subcommands read ``.gz`` traces transparently.  ``diff`` exits 1 on
@@ -25,6 +28,7 @@ import argparse
 import json
 import sys
 
+from . import prof as _prof
 from .chrome import write_chrome_trace
 from .ledger import DEFAULT_LEDGER, ingest, load_ledger
 from .report import (REFERENCE_PATH, convgate, render_frontier,
@@ -118,6 +122,39 @@ def main(argv=None) -> int:
                    help="re-run the canonical scenarios and REWRITE the "
                         "reference file instead of gating")
 
+    p = sub.add_parser("prof", help="phase-attribution profile of a "
+                                    "trace's phase records")
+    p.add_argument("trace")
+    p.add_argument("--flame", default=None, metavar="FILE",
+                   help="also write folded stacks (speedscope/"
+                        "flamegraph.pl input) here")
+    p.add_argument("--out", default=None, metavar="FILE",
+                   help="also write the table here")
+    p.add_argument("--min-attribution", type=float, default=None,
+                   metavar="FRAC",
+                   help="exit 1 if less than this fraction of wall time "
+                        "is attributed (CI gate, e.g. 0.9)")
+
+    p = sub.add_parser("perfdiff", help="diff two phase profiles and "
+                                        "name the top regressed phases")
+    p.add_argument("trace_a", help="reference trace")
+    p.add_argument("trace_b", help="fresh trace")
+    p.add_argument("--top", type=int, default=8)
+    p.add_argument("--tol", type=float, default=0.2,
+                   help="per-phase regression tolerance (default 0.2)")
+
+    p = sub.add_parser("bench-history",
+                       help="ingest BENCH_*.json emissions into the "
+                            "append-only history and render per-metric "
+                            "trajectories with regression onsets")
+    p.add_argument("bench_json", nargs="*",
+                   help="BENCH_*.json files to ingest (none: render "
+                        "the existing history)")
+    p.add_argument("--history", default=_prof.DEFAULT_HISTORY)
+    p.add_argument("--tol", type=float, default=0.2)
+    p.add_argument("--sha", default=None,
+                   help="git sha override for the ingested entries")
+
     args = ap.parse_args(argv)
 
     if args.cmd == "summarize":
@@ -180,6 +217,40 @@ def main(argv=None) -> int:
         return convgate(args.reference, traces=args.traces or None,
                         scenario=args.scenario, ledger_path=args.ledger,
                         tol=args.tol, tol_bytes=args.tol_bytes)
+    if args.cmd == "prof":
+        profile = _prof.collect(load(args.trace))
+        table = _prof.render_profile(profile, title=args.trace)
+        print(table)
+        if args.out:
+            with open(args.out, "w") as f:
+                f.write(table + "\n")
+            print(f"wrote {args.out}")
+        if args.flame:
+            with open(args.flame, "w") as f:
+                f.write(_prof.folded(profile))
+            print(f"wrote {args.flame} (folded stacks — load in "
+                  f"https://speedscope.app)")
+        if args.min_attribution is not None:
+            _, frac = _prof.attribution(profile)
+            if frac < args.min_attribution:
+                print(f"ATTRIBUTION GATE FAILED: {frac:.1%} < "
+                      f"{args.min_attribution:.1%} of wall attributed")
+                return 1
+        return 0
+    if args.cmd == "perfdiff":
+        d = _prof.perfdiff(load(args.trace_a), load(args.trace_b),
+                           tol=args.tol, top=args.top)
+        print(_prof.render_perfdiff(d, top=args.top))
+        return 0
+    if args.cmd == "bench-history":
+        for path in args.bench_json:
+            entry, added = _prof.ingest_bench(path, args.history,
+                                              sha=args.sha)
+            print(f"{path}: {'ingested' if added else 'already present'} "
+                  f"as {entry['group']}/{entry['bench_id']}")
+        print(_prof.render_history(_prof.load_history(args.history),
+                                   tol=args.tol))
+        return 0
     return 2
 
 

@@ -13,7 +13,16 @@ Two clock domains map onto the single trace timeline:
   scaled to µs — pids ``1`` (deliveries, one thread per ground station),
   ``2`` (engine rounds), ``4`` (federated rounds);
 * host-time spans (kernel dispatches, runner stages) use wall seconds
-  since tracer start — pid ``3``.
+  since tracer start — pid ``3``;
+* phase rollups (:mod:`repro.obs.prof`) are per-round *sums*, not
+  timestamped spans, so pid ``5`` renders them as a synthetic-timeline
+  icicle: each round/run lays its phases out sequentially from the
+  previous round's end (children inside their parents), which preserves
+  relative widths — the thing a flame view is for — without pretending
+  the rollup knows real start times;
+* ``series`` samples (schema v2) map to counter tracks on pid ``6``
+  keyed by step (not time); non-finite values are skipped so the JSON
+  stays loadable (Perfetto rejects NaN).
 
 They share an origin but not a rate; the pid split keeps them on
 separate tracks so the mismatch can't mislead.
@@ -21,7 +30,8 @@ separate tracks so the mismatch can't mislead.
 from __future__ import annotations
 
 import json
-from typing import List
+import math
+from typing import Dict, List
 
 _US = 1e6    # seconds → microseconds
 
@@ -29,13 +39,47 @@ PID_DELIVERIES = 1
 PID_ROUNDS = 2
 PID_HOST = 3
 PID_FL = 4
+PID_PROF = 5
+PID_SERIES = 6
 
 _PROCESS_NAMES = {
     PID_DELIVERIES: "sim: deliveries (per ground station)",
     PID_ROUNDS: "sim: engine rounds",
     PID_HOST: "host: stages & kernel dispatches",
     PID_FL: "federated rounds (SpaceRunner)",
+    PID_PROF: "prof: phase rollups (synthetic timeline)",
+    PID_SERIES: "series (x-axis = step, not time)",
 }
+
+
+def _phase_unit_events(pending: List[dict], wall: float, label: str,
+                       offset: float) -> List[dict]:
+    """Icicle layout for one flushed unit's phase records: depth-1
+    phases sequential from the unit's start, children recursively from
+    their parent's start — widths are the measured totals."""
+    totals = {r["path"]: r for r in pending}
+    ev = [{"ph": "X", "pid": PID_PROF, "tid": 0, "ts": offset * _US,
+           "dur": wall * _US, "name": label, "cat": "phase_total",
+           "args": {"wall_s": wall}}]
+
+    def lay(paths: List[str], t0: float, depth: int) -> None:
+        cursor = t0
+        for p in paths:
+            r = totals[p]
+            ev.append({"ph": "X", "pid": PID_PROF, "tid": 0,
+                       "ts": cursor * _US, "dur": r["total"] * _US,
+                       "name": p.split("/")[-1], "cat": "phase",
+                       "args": {"path": p, "count": r["count"],
+                                "total_s": r["total"]}})
+            kids = sorted(q for q in totals
+                          if q.startswith(p + "/")
+                          and "/" not in q[len(p) + 1:])
+            if kids:
+                lay(kids, cursor, depth + 1)
+            cursor += r["total"]
+
+    lay(sorted(p for p in totals if "/" not in p), offset, 0)
+    return ev
 
 
 def chrome_trace(records: List[dict]) -> dict:
@@ -46,6 +90,9 @@ def chrome_trace(records: List[dict]) -> dict:
         ev.append({"ph": "M", "name": "process_name", "pid": pid, "tid": 0,
                    "args": {"name": name}})
     bytes_cum = 0.0
+    prof_pending: List[dict] = []
+    prof_offset = 0.0
+    series_tids: Dict[str, int] = {}
     for r in records:
         kind = r.get("kind")
         if kind == "delivery":
@@ -101,6 +148,25 @@ def chrome_trace(records: List[dict]) -> dict:
                 "name": f"fl_round {r['round']}", "cat": "fl_round",
                 "args": args,
             })
+        elif kind == "phase":
+            prof_pending.append(r)
+        elif kind == "phase_total":
+            unit = ("round" if "round" in r else "run",
+                    r.get("round", r.get("run")))
+            label = (f"{r.get('engine', '?')} {r.get('mode', '?')} "
+                     f"{unit[0]} {unit[1]}")
+            ev.extend(_phase_unit_events(prof_pending, r["wall"], label,
+                                         prof_offset))
+            prof_offset += r["wall"]
+            prof_pending = []
+        elif kind == "series":
+            v = r["value"]
+            if not math.isfinite(v):
+                continue            # Perfetto rejects NaN/inf JSON
+            tid = series_tids.setdefault(r["name"], len(series_tids))
+            ev.append({"ph": "C", "pid": PID_SERIES, "tid": tid,
+                       "ts": r["step"] * _US, "name": r["name"],
+                       "args": {"value": v}})
         elif "t_host" in r and "dur_host" in r:       # kernel / span / …
             ev.append({
                 "ph": "X", "pid": PID_HOST, "tid": 0,

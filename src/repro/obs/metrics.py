@@ -25,6 +25,11 @@ from typing import Dict, Optional, Sequence, Tuple
 DEFAULT_BOUNDS = (0.01, 0.1, 0.5, 1.0, 5.0, 10.0, 60.0, 300.0, 1800.0,
                   7200.0, 43200.0)
 
+# phase-profiler bounds (repro.obs.prof): per-round phase totals span
+# microseconds (a window-fit pass at mega-1000) to whole-round seconds
+PHASE_BOUNDS = (1e-6, 3e-6, 1e-5, 3e-5, 1e-4, 3e-4, 1e-3, 3e-3, 1e-2,
+                3e-2, 0.1, 0.3, 1.0, 3.0, 10.0)
+
 
 class Counter:
     """Labelled monotone counter: ``add(v, station=3)`` accumulates into
@@ -103,6 +108,39 @@ class Histogram:
     def mean(self) -> float:
         return self.sum / self.count if self.count else 0.0
 
+    def percentile(self, q: float) -> Optional[float]:
+        """Interpolated ``q``-th percentile (``q`` in [0, 100]) from the
+        bucket counts.
+
+        Linear interpolation inside the containing bucket, with exact
+        edges everywhere a sidecar stat pins one: the underflow bucket
+        spans ``[min, lo)``, the first regular bucket starts at ``lo``
+        (or ``min`` without a lower bound), and the overflow bucket
+        spans ``(bounds[-1], max]``.  The result is clamped to
+        ``[min, max]``, so p0 → ``min`` and p100 → ``max`` hold
+        regardless of bucket geometry.  Returns ``None`` when empty."""
+        if not self.count:
+            return None
+        q = min(max(float(q), 0.0), 100.0)
+        target = q / 100.0 * self.count
+        buckets = []                       # (count, lower_edge, upper_edge)
+        if self.underflow:
+            buckets.append((self.underflow, self.min, self.lo))
+        lo_edge = self.lo if self.lo is not None else self.min
+        for i, b in enumerate(self.bounds):
+            if self.counts[i]:
+                buckets.append((self.counts[i], lo_edge, b))
+            lo_edge = b
+        if self.counts[-1]:
+            buckets.append((self.counts[-1], self.bounds[-1], self.max))
+        cum = 0
+        for c, e0, e1 in buckets:
+            if target <= cum + c:
+                frac = (target - cum) / c
+                return min(max(e0 + (e1 - e0) * frac, self.min), self.max)
+            cum += c
+        return self.max
+
     def to_dict(self) -> dict:
         return {"count": self.count, "sum": self.sum, "mean": self.mean,
                 "min": self.min if self.count else None,
@@ -110,6 +148,20 @@ class Histogram:
                 "bounds": list(self.bounds), "counts": list(self.counts),
                 "lo": self.lo, "underflow": self.underflow,
                 "overflow": self.overflow}
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "Histogram":
+        """Rebuild a histogram from a :meth:`to_dict` snapshot (what a
+        trace's final ``metrics`` record carries) — lets the profiler
+        rollup compute percentiles from a loaded trace."""
+        h = cls(d["bounds"], lo=d.get("lo"))
+        h.counts = list(d["counts"])
+        h.underflow = int(d.get("underflow", 0))
+        h.count = int(d["count"])
+        h.sum = float(d["sum"])
+        h.min = d["min"] if d.get("min") is not None else math.inf
+        h.max = d["max"] if d.get("max") is not None else -math.inf
+        return h
 
 
 class Metrics:

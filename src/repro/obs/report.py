@@ -257,12 +257,18 @@ def watch(path: str, total: Optional[int] = None, interval: float = 0.5,
                         row += f"  ETA {_eta_str(left / rate)}"
                 out.write(row + "\n")
             elif kind == "metrics":
+                if n_rounds == 0:
+                    out.write("no rounds recorded\n")
                 out.write(f"trace closed: {n_rounds} rounds in "
                           f"{now - t_start:.1f}s\n")
                 return 0
         if not follow:
+            if n_rounds == 0:
+                out.write("no rounds recorded\n")
             return 0
         if max_wait is not None and now - t_last_new > max_wait:
+            if n_rounds == 0:
+                out.write("no rounds recorded\n")
             out.write(f"no new records for {max_wait:.0f}s; stopping "
                       f"({n_rounds} rounds seen)\n")
             return 0

@@ -88,7 +88,7 @@ def render_rounds(records: Sequence[dict]) -> str:
         return "\n".join([FL_HEADER] + [fl_row(r) for r in fl])
     rounds = of_kind(records, "round")
     if not rounds:
-        return "(no round records in trace)"
+        return "(no rounds recorded)"
     return "\n".join([ENG_HEADER] + [eng_row(r) for r in rounds])
 
 

@@ -37,6 +37,10 @@ Event kinds emitted by the instrumented stack:
                    per-round convergence/byte curves the run ledger
                    (:mod:`repro.obs.ledger`) folds into cross-run tables
                    and the ``convgate`` CI gate compares (schema v2)
+    ``phase``      per-(round, phase-path) wall-time rollup and
+    ``phase_total``  the round's measured wall — the phase-attribution
+                   profiler (:mod:`repro.obs.prof`); host timing, so
+                   neither is a trace-diff kind
 
 ``trace-diff`` (:mod:`repro.obs.summary`) compares the deterministic
 sim-schema kinds (round/delivery/arq/cohort) and ignores host-timing
@@ -64,6 +68,7 @@ import time
 from typing import IO, List, Optional
 
 from .metrics import Metrics
+from .prof import PhaseAcc
 
 # v1: header/event/metrics records.  v2 adds the ``series`` record kind
 # (additive — every v1 record reads unchanged; `tests/data/
@@ -96,8 +101,9 @@ class Tracer:
     the not-yet-flushed tail).
     """
 
-    __slots__ = ("events", "metrics", "path", "meta", "stream_every",
-                 "_t0_host", "_closed", "_fh", "_n_streamed")
+    __slots__ = ("events", "metrics", "prof", "path", "meta",
+                 "stream_every", "_t0_host", "_closed", "_fh",
+                 "_n_streamed")
 
     def __init__(self, path: Optional[str] = None,
                  stream_every: Optional[int] = None, **meta):
@@ -105,6 +111,12 @@ class Tracer:
             raise ValueError("stream_every needs a path to append to")
         self.events: List[dict] = []
         self.metrics = Metrics()
+        # phase-attribution accumulator (repro.obs.prof); the engines
+        # read it once per round alongside active().  prof_sync=True in
+        # the meta additionally times a block-until-ready per kernel
+        # dispatch (honest host/device split; changes timing, not
+        # results — keep it out of gated benches)
+        self.prof = PhaseAcc(sync_device=bool(meta.get("prof_sync")))
         self.path = path
         self.meta = meta
         self.stream_every = stream_every

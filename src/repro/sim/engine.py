@@ -36,6 +36,7 @@ from __future__ import annotations
 import dataclasses
 import heapq
 import itertools
+import time
 from collections import defaultdict
 from typing import Dict, List, Optional, Sequence, Tuple, Union
 
@@ -462,9 +463,20 @@ class Engine:
 
     def ensure(self, t_end: float) -> None:
         old = self.plan.horizon
+        # fast path (the per-event call in the async loops): replicate
+        # ContactPlan.ensure's early-exit here so the covered case costs
+        # one compare and the profiler only times actual extensions
+        if t_end <= self.plan.t_start + old:
+            return
+        trc = _obs_active()
+        prof = trc.prof if trc is not None else None
+        if prof is not None:
+            prof.begin("plan_extend")
         self.plan.ensure(t_end)
         if self.plan.horizon != old:
             self._refresh_blocked()
+        if prof is not None:
+            prof.end()
 
     def install_channel(self, channel) -> None:
         """Install (or clear) a lossy channel post-construction.
@@ -554,6 +566,8 @@ class Engine:
         on the topology first (plane rounds run the in-orbit aggregation
         driver in :mod:`repro.sim.topology`), then to the vectorized fast
         path unless ``fast=False``."""
+        trc = _obs_active()
+        t_wall = time.perf_counter() if trc is not None else 0.0
         if self.topology.kind != "direct":
             from .topology import run_round_plane
             res = run_round_plane(self, t0, msg_bytes)
@@ -563,15 +577,25 @@ class Engine:
         else:
             res = self._run_round_oracle(t0, msg_bytes)
         k, self._round_idx = self._round_idx, self._round_idx + 1
-        trc = _obs_active()
         if trc is not None:
-            _emit_round_trace(trc, res, "fast" if self.fast else "oracle", k)
+            engine = "fast" if self.fast else "oracle"
+            trc.prof.begin("trace_emit")
+            _emit_round_trace(trc, res, engine, k)
+            trc.prof.end()
+            trc.prof.flush(trc, engine=engine, mode="sync", round=k,
+                           wall=time.perf_counter() - t_wall)
         return res
 
     def _run_round_oracle(self, t0: float, msg_bytes: float) -> RoundResult:
         sc = self.scenario
+        trc = _obs_active()
+        prof = trc.prof if trc is not None else None
         self.ensure(t0 + 2 * sc.lookahead)
+        if prof is not None:
+            prof.begin("assign")
         asg = self.policy.assign(t0, msg_bytes, self)
+        if prof is not None:
+            prof.end()
         n = sc.walker.n_sats
         scheduled = np.zeros(n, dtype=bool)
         for s in asg.gateways:
@@ -604,18 +628,22 @@ class Engine:
             st = tx_state[g]
             if st["busy"] or not st["queue"]:
                 return
+            if prof is not None:
+                prof.begin("window_fit")
             win = st["win"]
+            fit = False
             for _ in range(64):
                 if win is None:
-                    st["queue"].clear()
-                    st["win"] = None
-                    return                      # undeliverable this round
+                    break
                 start = max(t, win[0], station_free[win[2]])
                 if start + self.tx_estimate(g, win, start, msg_bytes,
                                             gs_tx) <= win[1]:
+                    fit = True
                     break
                 win = self.usable_window(g, win[1])
-            else:
+            if prof is not None:
+                prof.end()
+            if not fit:                         # undeliverable this round
                 st["queue"].clear()
                 st["win"] = None
                 return
@@ -625,12 +653,18 @@ class Engine:
                 return
             _, sat = st["queue"].pop(0)         # FIFO = arrival order
             st["busy"] = True
+            if prof is not None:
+                prof.begin("tx_commit")
             t_done, outcome = self.tx_commit(g, sat, win, t, msg_bytes,
                                              gs_tx)
+            if prof is not None:
+                prof.end()
             station_free[win[2]] = t_done
             push(t_done, "tx_done", gw=g, sat=sat, station=win[2],
                  win_rise=win[0], outcome=outcome)
 
+        if prof is not None:
+            prof.begin("event_loop")
         while q:
             t, _, kind, kw = heapq.heappop(q)
             if kind == "train_done":
@@ -654,6 +688,8 @@ class Engine:
                     window=kw["win_rise"], **kw["outcome"]))
                 tx_state[g]["busy"] = False
                 try_tx(g, t)
+        if prof is not None:
+            prof.end()
 
         mask = np.zeros(n, dtype=bool)
         for d in deliveries:
@@ -685,6 +721,8 @@ class Engine:
                 f"aggregation needs a plane-synchronous merge point, which "
                 f"the free-running mode has no analogue of (topology="
                 f"{self.topology.name!r})")
+        trc = _obs_active()
+        t_wall = time.perf_counter() if trc is not None else 0.0
         if self.fast:
             from .fastpath import run_async_fast
             out = run_async_fast(self, t0, msg_bytes, n_deliveries,
@@ -693,10 +731,13 @@ class Engine:
             out = self._run_async_oracle(t0, msg_bytes, n_deliveries,
                                          max_time=max_time)
         run, self._async_idx = self._async_idx, self._async_idx + 1
-        trc = _obs_active()
         if trc is not None:
-            _emit_async_trace(trc, out, "fast" if self.fast else "oracle",
-                              run, t0, n_deliveries)
+            engine = "fast" if self.fast else "oracle"
+            trc.prof.begin("trace_emit")
+            _emit_async_trace(trc, out, engine, run, t0, n_deliveries)
+            trc.prof.end()
+            trc.prof.flush(trc, engine=engine, mode="async", run=run,
+                           wall=time.perf_counter() - t_wall)
         return out
 
     def _run_async_oracle(self, t0: float, msg_bytes: float,
@@ -704,6 +745,8 @@ class Engine:
                           max_time: Optional[float] = None) -> List[Delivery]:
         sc = self.scenario
         n = sc.walker.n_sats
+        trc = _obs_active()
+        prof = trc.prof if trc is not None else None
         gs_tx = sc.link.gs_time(msg_bytes)
         horizon_cap = t0 + (max_time if max_time is not None
                             else 100.0 * sc.lookahead)
@@ -713,6 +756,8 @@ class Engine:
         def push(t, kind, **kw):
             heapq.heappush(q, (t, next(seq), kind, kw))
 
+        if prof is not None:
+            prof.begin("round_setup")
         tx_state = {s: {"queue": [], "busy": False, "win": None}
                     for s in range(n)}
         station_free: Dict[int, float] = defaultdict(float)
@@ -721,6 +766,8 @@ class Engine:
 
         for s in range(n):
             push(t0 + sc.compute_of(s), "train_done", sat=s)
+        if prof is not None:
+            prof.end()
 
         def reachable(sat):
             """(candidate, hops) within max_hops over the ISL graph."""
@@ -771,19 +818,24 @@ class Engine:
             st = tx_state[g]
             if st["busy"] or not st["queue"]:
                 return
+            if prof is not None:
+                prof.begin("window_fit")
             win = st["win"]
             if win is None or win[1] <= t:
                 win = self.usable_window(g, t)
+            fit = False
             for _ in range(64):
                 if win is None:
-                    park(st, t)
-                    return
+                    break
                 start = max(t, win[0], station_free[win[2]])
                 if start + self.tx_estimate(g, win, start, msg_bytes,
                                             gs_tx) <= win[1]:
+                    fit = True
                     break
                 win = self.usable_window(g, win[1])
-            else:
+            if prof is not None:
+                prof.end()
+            if not fit:
                 park(st, t)
                 return
             st["win"] = win
@@ -792,14 +844,22 @@ class Engine:
                 return
             meta = st["queue"].pop(0)
             st["busy"] = True
+            if prof is not None:
+                prof.begin("tx_commit")
             t_done, outcome = self.tx_commit(g, meta[1], win, t, msg_bytes,
                                              gs_tx)
+            if prof is not None:
+                prof.end()
             station_free[win[2]] = t_done
             push(t_done, "tx_done", gw=g, sat=meta[1], hops=meta[2],
                  station=win[2], win_rise=win[0], outcome=outcome)
 
         def dispatch(s, t):
+            if prof is not None:
+                prof.begin("route")
             route = choose_route(s, t)
+            if prof is not None:
+                prof.end()
             if route is None:
                 if t < horizon_cap:
                     push(min(t + sc.lookahead, horizon_cap), "retry", sat=s)
@@ -812,6 +872,8 @@ class Engine:
                 push(t + isl_t, "isl_arrive", sat=s, gw=gw, hops=hops)
 
         n_ok = 0
+        if prof is not None:
+            prof.begin("event_loop")
         while q and n_ok < n_deliveries:
             t, _, kind, kw = heapq.heappop(q)
             if t > horizon_cap:
@@ -842,6 +904,8 @@ class Engine:
                 # async analogue yet)
                 train_start[s] = t
                 push(t + sc.compute_of(s), "train_done", sat=s)
+        if prof is not None:
+            prof.end()
 
         # records are appended in heap-pop order, i.e. sorted by t_done;
         # the loop stops right after the n_deliveries-th success, so the

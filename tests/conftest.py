@@ -28,6 +28,7 @@ SIMWIRE_MODULES = {
     "test_channel",
     "test_obs",
     "test_obs_ledger",
+    "test_obs_prof",
     "test_topology",
     "test_api",
 }

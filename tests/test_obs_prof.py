@@ -1,0 +1,387 @@
+"""repro.obs.prof: phase accumulation, rollup/attribution math, the
+≥90% mega-1000 attribution gate on both engines, perfdiff localization
+of a seeded slowdown, folded-stacks/chrome export, bench history with
+regression-onset localization, and the zero-round summarize/watch
+regressions."""
+import io
+import json
+import math
+import re
+
+import pytest
+
+from repro import obs
+from repro.constellation.links import message_bytes
+from repro.obs import prof
+from repro.obs.metrics import Histogram
+from repro.obs.summary import DIFF_KINDS, of_kind
+from repro.sim import Engine, get_scenario
+
+MSG = message_bytes(10000, 10.0)
+
+
+def _trace_run(scenario: str, fast: bool, *, rounds=2, async_n=15,
+               seed=3):
+    eng = Engine(get_scenario(scenario), seed=seed, fast=fast)
+    with obs.tracing(scenario=scenario) as trc:
+        t = 0.0
+        for _ in range(rounds):
+            t += eng.run_round(t, MSG).duration
+        if async_n:
+            eng.run_async(t, MSG, async_n)
+        return trc.records()
+
+
+# ---------------------------------------------------------------------------
+# Histogram.percentile (satellite 1)
+# ---------------------------------------------------------------------------
+
+def test_percentile_interpolates_and_pins_edges():
+    h = Histogram(bounds=(10.0, 20.0), lo=10.0)
+    h.observe(5.0)                  # underflow bucket spans [min, lo)
+    h.observe(15.0)
+    assert h.percentile(25) == pytest.approx(7.5)   # inside [5, 10)
+    assert h.percentile(50) == pytest.approx(10.0)  # underflow upper edge
+    assert h.percentile(0) == 5.0                   # p0 → min
+    assert h.percentile(100) == 15.0                # p100 → max
+
+
+def test_percentile_overflow_bucket_spans_to_max():
+    h = Histogram(bounds=(1.0, 2.0))
+    for v in (0.5, 1.5, 10.0, 30.0):
+        h.observe(v)
+    # overflow bucket spans (bounds[-1], max]: p100 must hit max exactly
+    assert h.percentile(100) == 30.0
+    p75 = h.percentile(75)
+    assert 2.0 <= p75 <= 30.0
+    # clamping: every percentile stays inside [min, max]
+    assert h.percentile(1) >= 0.5
+
+
+def test_percentile_empty_and_from_dict_roundtrip():
+    h = Histogram(bounds=(1.0, 2.0))
+    assert h.percentile(50) is None
+    h.observe(1.5)
+    h.observe(0.2)
+    back = Histogram.from_dict(json.loads(json.dumps(h.to_dict())))
+    for q in (0, 25, 50, 99, 100):
+        assert back.percentile(q) == pytest.approx(h.percentile(q))
+
+
+# ---------------------------------------------------------------------------
+# PhaseAcc mechanics + emission
+# ---------------------------------------------------------------------------
+
+def test_phase_acc_nesting_add_many_and_flush():
+    with obs.tracing() as trc:
+        p = trc.prof
+        p.begin("a")
+        p.begin("b")
+        p.end()
+        p.end()
+        p.add("k", 0.25)                      # externally-timed, top level
+        p.add_many(("a", "x"), 3, 0.5)        # folded hot-path accumulator
+        p.add_many(("a", "x"), 0, 0.0)        # zero-count fold is a no-op
+        p.flush(trc, engine="fast", mode="sync", wall=1.0, round=0)
+        records = trc.records()
+    ph = {r["path"]: r for r in of_kind(records, "phase")}
+    assert set(ph) == {"a", "a/b", "a/x", "k"}
+    assert ph["a/x"]["count"] == 3 and ph["a/x"]["total"] == 0.5
+    assert ph["a"]["count"] == 1 and ph["a"]["total"] >= ph["a/b"]["total"]
+    [pt] = of_kind(records, "phase_total")
+    assert pt["wall"] == 1.0 and pt["round"] == 0
+    # flush resets: a second flush with no activity emits only the total
+    with obs.tracing() as trc2:
+        trc2.prof.flush(trc2, engine="fast", mode="sync", wall=0.0, run=1)
+        assert of_kind(trc2.records(), "phase") == []
+
+
+@pytest.mark.parametrize("fast", [True, False])
+def test_engine_emits_phase_records(fast):
+    records = _trace_run("walker-kiruna", fast=fast)
+    paths = {r["path"] for r in of_kind(records, "phase")}
+    assert {"assign", "event_loop"} <= paths
+    assert any(p.startswith("event_loop/") for p in paths)
+    totals = of_kind(records, "phase_total")
+    # 2 sync rounds + 1 async run, each flushed once
+    assert len(totals) == 3
+    assert all(t["wall"] > 0.0 for t in totals)
+    assert {t["mode"] for t in totals} == {"sync", "async"}
+    engine = "fast" if fast else "oracle"
+    assert all(t["engine"] == engine for t in totals)
+
+
+def test_phase_kinds_stay_out_of_diff_contract():
+    # host timings are nondeterministic: phase records must never break
+    # the fast-vs-oracle trace diff
+    for kind in prof.PHASE_KINDS:
+        assert kind not in DIFF_KINDS
+    equal, report = obs.diff(_trace_run("walker-kiruna", fast=True),
+                             _trace_run("walker-kiruna", fast=False))
+    assert equal, report
+
+
+# ---------------------------------------------------------------------------
+# rollup math + attribution gate
+# ---------------------------------------------------------------------------
+
+def _fake_records():
+    return [
+        {"kind": "phase", "engine": "fast", "mode": "sync", "round": 0,
+         "path": "a", "count": 1, "total": 0.6},
+        {"kind": "phase", "engine": "fast", "mode": "sync", "round": 0,
+         "path": "a/b", "count": 4, "total": 0.2},
+        {"kind": "phase", "engine": "fast", "mode": "sync", "round": 0,
+         "path": "c", "count": 1, "total": 0.2},
+        {"kind": "phase", "engine": "fast", "mode": "sync", "round": 0,
+         "path": "kernel.pack", "count": 2, "total": 5.0},
+        {"kind": "phase_total", "engine": "fast", "mode": "sync",
+         "round": 0, "wall": 1.0},
+    ]
+
+
+def test_collect_self_times_and_attribution_math():
+    p = prof.collect(_fake_records())
+    assert p["wall"] == 1.0 and p["units"] == 1
+    selfs = prof.self_times(p["phases"])
+    assert selfs["a"] == pytest.approx(0.4)     # total − direct child
+    assert selfs["a/b"] == pytest.approx(0.2)
+    att, frac = prof.attribution(p)
+    # kernel.* roots are excluded from the attributed sum
+    assert att == pytest.approx(0.8) and frac == pytest.approx(0.8)
+    table = prof.render_profile(p, title="unit")
+    assert "(unattributed residual)" in table
+    assert "attributed 80.0%" in table
+    assert "20.0%" in table                     # the residual row
+
+
+def test_folded_stacks_format():
+    text = prof.folded(prof.collect(_fake_records()))
+    lines = text.strip().split("\n")
+    # every line: semicolon-joined frames, space, integer µs
+    assert all(re.fullmatch(r"[^ ]+ \d+", ln) for ln in lines)
+    assert "a;b 200000" in lines
+    assert "(unattributed) 200000" in lines     # 1.0 wall − 0.8 attributed
+
+
+@pytest.mark.parametrize("fast", [True, False])
+def test_mega1000_attribution_gate(fast):
+    # the tentpole acceptance gate: ≥90% of round wall attributed to
+    # named phases on mega-1000, sync AND async, both engines
+    records = _trace_run("mega-1000", fast=fast, rounds=2, async_n=30,
+                         seed=0)
+    for mode in ("sync", "async"):
+        sub = [r for r in records
+               if r.get("kind") in prof.PHASE_KINDS and r["mode"] == mode]
+        _, frac = prof.attribution(prof.collect(sub))
+        assert frac >= 0.9, (
+            f"{'fast' if fast else 'oracle'} {mode}: only {frac:.1%} "
+            f"of wall attributed")
+    _, overall = prof.attribution(prof.collect(records))
+    assert overall >= 0.9
+
+
+# ---------------------------------------------------------------------------
+# perfdiff: localizing a seeded slowdown (acceptance criterion)
+# ---------------------------------------------------------------------------
+
+def test_perfdiff_localizes_seeded_commit_slowdown(monkeypatch):
+    import time as _time
+
+    from repro.sim import fastpath
+    clean = _trace_run("walker-kiruna", fast=True, async_n=0)
+    orig = fastpath.ChannelCache.commit
+
+    def slow_commit(self, *a, **kw):
+        _time.sleep(0.0005)
+        return orig(self, *a, **kw)
+
+    monkeypatch.setattr(fastpath.ChannelCache, "commit", slow_commit)
+    slowed = _trace_run("walker-kiruna", fast=True, async_n=0)
+    d = prof.perfdiff(clean, slowed, tol=0.2)
+    assert d["offenders"], "seeded slowdown produced no offenders"
+    worst = d["offenders"][0]
+    assert worst["path"].endswith("tx_commit"), (
+        f"slowdown attributed to {worst['path']!r}, not tx_commit")
+    assert worst["ratio"] > 1.2
+    text = prof.render_perfdiff(d)
+    assert "top regressed phases" in text and "tx_commit" in text
+
+
+def test_perfdiff_clean_pair_reports_no_offenders():
+    a = _trace_run("walker-kiruna", fast=True, async_n=0)
+    d = prof.perfdiff(a, a)
+    assert d["offenders"] == []
+    assert "no phase regressed beyond tolerance" in prof.render_perfdiff(d)
+
+
+def test_compare_gate_failure_prints_perfdiff(tmp_path, capsys):
+    from repro.bench import compare
+    base, new = tmp_path / "base", tmp_path / "new"
+    base.mkdir(), new.mkdir()
+    doc = {"schema": 1, "tiny": True, "benchmarks": {
+        "fast_round": {"speedup": {"value": 10.0, "gate": True,
+                                   "higher_is_better": True}}}}
+    (base / "BENCH_sim.json").write_text(json.dumps(doc))
+    doc["benchmarks"]["fast_round"]["speedup"]["value"] = 1.0   # regressed
+    (new / "BENCH_sim.json").write_text(json.dumps(doc))
+    for d in (base, new):
+        eng = Engine(get_scenario("walker-kiruna"), seed=0)
+        with obs.tracing(str(d / "TRACE_wk.jsonl")):
+            eng.run_round(0.0, MSG)
+    assert compare.main([str(new), "--baseline", str(base)]) == 1
+    out = capsys.readouterr().out
+    assert "PERF GATE FAILED" in out
+    assert "phase-level perfdiff for TRACE_wk.jsonl" in out
+
+
+# ---------------------------------------------------------------------------
+# chrome export on schema-v2 traces with series + phase spans (satellite 4)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("fast", [True, False])
+def test_chrome_trace_with_series_and_phases(fast):
+    eng = Engine(get_scenario("walker-kiruna"), seed=0, fast=fast)
+    with obs.tracing(scenario="chrome-unit") as trc:
+        eng.run_round(0.0, MSG)
+        trc.series("e_K", 0, 2.5)
+        trc.series("e_K", 1, float("nan"))      # must be skipped, not kept
+        records = trc.records()
+    doc = obs.chrome_trace(records)
+    json.dumps(doc, allow_nan=False)            # strict-JSON loadable
+    ev = doc["traceEvents"]
+    prof_ev = [e for e in ev if e.get("pid") == 5 and e["ph"] == "X"]
+    assert {e["cat"] for e in prof_ev} == {"phase", "phase_total"}
+    # one synthetic-timeline slice per emitted phase path + the unit span
+    assert len(prof_ev) == len(of_kind(records, "phase")) + 1
+    # children nest inside their parents on the synthetic timeline
+    by_path = {e["args"].get("path"): e for e in prof_ev
+               if e["cat"] == "phase"}
+    for path, e in by_path.items():
+        if "/" in path:
+            parent = by_path[path.rsplit("/", 1)[0]]
+            assert e["ts"] >= parent["ts"]
+            assert e["ts"] + e["dur"] <= parent["ts"] + parent["dur"] + 1e-6
+    series_ev = [e for e in ev if e.get("pid") == 6 and e["ph"] == "C"]
+    assert series_ev                             # engine curves + e_K
+    e_k = [e for e in series_ev if e["name"] == "e_K"]
+    assert len(e_k) == 1                         # NaN sample dropped
+    assert e_k[0]["args"]["value"] == 2.5
+    assert all(math.isfinite(e["args"]["value"]) for e in series_ev)
+
+
+# ---------------------------------------------------------------------------
+# zero-round summarize/watch regressions (satellite 2)
+# ---------------------------------------------------------------------------
+
+def test_summarize_header_only_trace(tmp_path):
+    # a crashed run can leave just the header line behind
+    p = tmp_path / "hdr.jsonl"
+    p.write_text(json.dumps({"kind": "header", "schema": 2,
+                             "scenario": "crashed"}) + "\n")
+    records = obs.load(str(p))
+    text = obs.summarize(records)
+    assert "(no rounds recorded)" in text
+
+
+def test_summarize_zero_round_trace():
+    with obs.tracing(scenario="empty") as trc:
+        records = trc.records()
+    assert "(no rounds recorded)" in obs.summarize(records)
+
+
+def test_watch_zero_round_trace_says_so(tmp_path):
+    from repro.obs.report import watch
+    p = str(tmp_path / "empty.jsonl")
+    with obs.tracing(p, scenario="empty"):
+        pass                                    # header + metrics only
+    out = io.StringIO()
+    assert watch(p, follow=False, out=out) == 0
+    assert "no rounds recorded" in out.getvalue()
+
+
+# ---------------------------------------------------------------------------
+# bench history + regression-onset localization
+# ---------------------------------------------------------------------------
+
+def _bench_doc(speedup: float) -> dict:
+    return {"schema": 1, "tiny": True, "benchmarks": {
+        "fast_round": {
+            "speedup": {"value": speedup, "gate": True,
+                        "higher_is_better": True},
+            "round_s": {"value": 0.01, "gate": False,
+                        "higher_is_better": False}}}}
+
+
+def test_bench_history_ingest_idempotent_and_onset(tmp_path):
+    hist = str(tmp_path / "hist.jsonl")
+    shas = ["aaa111", "bbb222", "ccc333"]
+    for i, speedup in enumerate([10.0, 10.5, 6.0]):   # 3rd regresses >20%
+        p = tmp_path / f"BENCH_sim_{i}.json"
+        p.write_text(json.dumps(_bench_doc(speedup)))
+        entry, added = prof.ingest_bench(str(p), hist, sha=shas[i])
+        assert added and entry["group"] == f"sim_{i}"
+    # re-ingest is a no-op (content-hashed entries)
+    _, added = prof.ingest_bench(str(tmp_path / "BENCH_sim_0.json"), hist,
+                                 sha="zzz999")
+    assert not added
+    entries = prof.load_history(hist)
+    assert len(entries) == 3
+    # the history treats each group independently; rebuild one group's
+    # trajectory to exercise onset localization
+    merged = [dict(e, group="sim") for e in entries]
+    text = prof.render_history(merged, tol=0.2)
+    assert "REGRESSION ONSET at emission #2 (git ccc333)" in text
+    assert "6 vs best 10.5" in text
+    # the ungated metric never flags even though it is flat
+    assert text.count("REGRESSION ONSET") == 1
+
+
+def test_onset_directionality():
+    assert prof._onset([10.0, 10.5, 6.0], hib=True, tol=0.2) == 2
+    assert prof._onset([10.0, 9.0, 8.5], hib=True, tol=0.2) is None
+    assert prof._onset([1.0, 1.1, 1.5], hib=False, tol=0.2) == 2
+    assert prof._onset([], hib=True, tol=0.2) is None
+
+
+def test_render_history_empty():
+    assert "empty" in prof.render_history([])
+
+
+# ---------------------------------------------------------------------------
+# CLI: prof / perfdiff / bench-history
+# ---------------------------------------------------------------------------
+
+def test_cli_prof_perfdiff_bench_history(tmp_path, capsys):
+    from repro.obs.__main__ import main
+    pa = str(tmp_path / "a.jsonl")
+    eng = Engine(get_scenario("walker-kiruna"), seed=0)
+    with obs.tracing(pa):
+        t = eng.run_round(0.0, MSG).duration
+        eng.run_round(t, MSG)
+
+    flame = str(tmp_path / "a.folded")
+    table = str(tmp_path / "a.txt")
+    assert main(["prof", pa, "--flame", flame, "--out", table]) == 0
+    assert "attributed" in capsys.readouterr().out
+    assert "(unattributed residual)" in open(table).read()
+    assert re.search(r"^event_loop", open(flame).read(), re.M)
+
+    # the attribution gate: impossible threshold must exit 1
+    assert main(["prof", pa, "--min-attribution", "1.5"]) == 1
+    assert "ATTRIBUTION GATE FAILED" in capsys.readouterr().out
+    assert main(["prof", pa, "--min-attribution", "0.1"]) == 0
+    capsys.readouterr()
+
+    assert main(["perfdiff", pa, pa]) == 0
+    assert "no phase regressed" in capsys.readouterr().out
+
+    bench = tmp_path / "BENCH_sim.json"
+    bench.write_text(json.dumps(_bench_doc(10.0)))
+    hist = str(tmp_path / "hist.jsonl")
+    assert main(["bench-history", str(bench), "--history", hist,
+                 "--sha", "abc123"]) == 0
+    out = capsys.readouterr().out
+    assert "ingested" in out and "bench history: 1 emission(s)" in out
+    assert main(["bench-history", "--history", hist]) == 0
+    assert "1 emission(s)" in capsys.readouterr().out
