@@ -28,12 +28,15 @@ def main() -> None:
             failures.append(name)
 
     from . import fig4_trajectory, kernel_bench, sim_scale, table1_error_feedback
-    from . import roofline, table2_space_comparison, table_lossy_ef, wire_bench
+    from . import roofline, table2_space_comparison, table_fault_tolerance
+    from . import table_lossy_ef, wire_bench
 
     section("Table 1: error feedback ablation",
             lambda: table1_error_feedback.main(quick=quick))
     section("Lossy-channel table: loss-robust EF vs naive EF vs no EF",
             lambda: table_lossy_ef.main(quick=quick))
+    section("Fault-tolerance table: quorum+failover+robust-EF vs naive restart",
+            lambda: table_fault_tolerance.main(quick=quick))
     section("Fig 4: error trajectory",
             lambda: fig4_trajectory.main(quick=quick))
     section("Table 2: constellation comparison",

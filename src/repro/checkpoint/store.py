@@ -5,10 +5,19 @@ plus a JSON treedef sidecar.  Sharding metadata (PartitionSpec strings) is
 recorded so a restore onto a mesh can re-place every leaf; on restore the
 arrays are device_put with the stored specs when a mesh is provided.
 
+Writes are **crash-safe**: both files go to a temp name first and land
+via ``os.replace`` (atomic on POSIX), the meta sidecar carries a SHA-256
+checksum of the final npz bytes, and the sidecar is written LAST — so it
+acts as the commit point.  A writer killed mid-save leaves either the old
+checkpoint intact or an orphaned ``*.tmp`` / checksum-mismatched pair
+that :func:`verify` and :func:`latest_valid_step` reject, never a
+silently corrupt "latest" checkpoint.
+
 No external deps (the environment has no orbax); formats are stable numpy.
 """
 from __future__ import annotations
 
+import hashlib
 import json
 import os
 from typing import Optional
@@ -27,8 +36,23 @@ def _flatten_with_names(tree):
     return names, leaves, treedef
 
 
-def save(path: str, tree, specs=None, step: Optional[int] = None):
-    """Write tree to <path>.npz (+ <path>.meta.json)."""
+def _sha256(path: str) -> str:
+    h = hashlib.sha256()
+    with open(path, "rb") as f:
+        for chunk in iter(lambda: f.read(1 << 20), b""):
+            h.update(chunk)
+    return h.hexdigest()
+
+
+def save(path: str, tree, specs=None, step: Optional[int] = None,
+         extra: Optional[dict] = None):
+    """Write tree to <path>.npz (+ <path>.meta.json), atomically.
+
+    ``extra`` is an optional JSON-safe dict merged into the meta sidecar
+    (under the ``"extra"`` key) — run-state such as time cursors and byte
+    accumulators rides along with the pytree (see
+    :class:`repro.checkpoint.run.RunCheckpoint`).
+    """
     names, leaves, _ = _flatten_with_names(tree)
     os.makedirs(os.path.dirname(os.path.abspath(path)) or ".", exist_ok=True)
 
@@ -39,20 +63,61 @@ def save(path: str, tree, specs=None, step: Optional[int] = None):
         return np.asarray(leaf)
 
     arrays = {f"a{i}": to_np(leaf) for i, leaf in enumerate(leaves)}
-    np.savez(path + ".npz", **arrays)
+    tmp_npz = path + ".npz.tmp"
+    with open(tmp_npz, "wb") as f:
+        np.savez(f, **arrays)
+        f.flush()
+        os.fsync(f.fileno())
+    os.replace(tmp_npz, path + ".npz")
     meta = {"names": names, "step": step,
-            "dtypes": [str(l.dtype) for l in leaves]}
+            "dtypes": [str(l.dtype) for l in leaves],
+            "checksum": _sha256(path + ".npz")}
+    if extra is not None:
+        meta["extra"] = extra
     if specs is not None:
         s_names, s_leaves, _ = _flatten_with_names(
             jax.tree_util.tree_map(str, specs,
                                    is_leaf=lambda x: hasattr(x, "index")))
         meta["specs"] = dict(zip(s_names, [str(s) for s in s_leaves]))
-    with open(path + ".meta.json", "w") as f:
+    tmp_meta = path + ".meta.json.tmp"
+    with open(tmp_meta, "w") as f:
         json.dump(meta, f)
+        f.flush()
+        os.fsync(f.fileno())
+    os.replace(tmp_meta, path + ".meta.json")
+
+
+def load_meta(path: str) -> Optional[dict]:
+    """The meta sidecar of one checkpoint, or None if absent/unparsable."""
+    try:
+        with open(path + ".meta.json") as f:
+            return json.load(f)
+    except (OSError, json.JSONDecodeError):
+        return None
+
+
+def verify(path: str) -> bool:
+    """True when the checkpoint at ``path`` is complete and uncorrupted:
+    both files exist, the meta parses, and the npz matches its recorded
+    checksum.  Pre-checksum checkpoints (no ``"checksum"`` key) pass as
+    long as both files exist — they predate crash-safety, not corruption."""
+    meta = load_meta(path)
+    if meta is None or not os.path.exists(path + ".npz"):
+        return False
+    want = meta.get("checksum")
+    return want is None or _sha256(path + ".npz") == want
 
 
 def restore(path: str, like, mesh=None, specs=None):
-    """Restore into the structure of `like` (a pytree of arrays or SDS)."""
+    """Restore into the structure of `like` (a pytree of arrays or SDS).
+
+    Refuses checksum-mismatched npz payloads — a crash mid-save can't
+    masquerade as a valid checkpoint (use :func:`latest_valid_step` to
+    fall back to the newest intact one)."""
+    meta = load_meta(path)
+    if meta is not None and meta.get("checksum") is not None \
+            and _sha256(path + ".npz") != meta["checksum"]:
+        raise ValueError(f"corrupt checkpoint (checksum mismatch): {path}")
     data = np.load(path + ".npz")
     names, leaves, treedef = _flatten_with_names(like)
     restored = []
@@ -75,8 +140,25 @@ def latest_step(ckpt_dir: str) -> Optional[int]:
     steps = []
     for f in os.listdir(ckpt_dir) if os.path.isdir(ckpt_dir) else []:
         if f.endswith(".meta.json"):
-            with open(os.path.join(ckpt_dir, f)) as fh:
-                meta = json.load(fh)
-            if meta.get("step") is not None:
+            meta = load_meta(os.path.join(ckpt_dir, f)[:-len(".meta.json")])
+            if meta is not None and meta.get("step") is not None:
                 steps.append(meta["step"])
     return max(steps) if steps else None
+
+
+def latest_valid_step(ckpt_dir: str, prefix: str = "") -> Optional[int]:
+    """Newest step in ``ckpt_dir`` whose checkpoint passes :func:`verify`.
+
+    Corrupt or half-written checkpoints (a writer killed mid-save) are
+    skipped — recovery falls back to the newest intact one."""
+    best = None
+    for f in os.listdir(ckpt_dir) if os.path.isdir(ckpt_dir) else []:
+        if not (f.startswith(prefix) and f.endswith(".meta.json")):
+            continue
+        base = os.path.join(ckpt_dir, f)[:-len(".meta.json")]
+        meta = load_meta(base)
+        if meta is None or meta.get("step") is None:
+            continue
+        if (best is None or meta["step"] > best) and verify(base):
+            best = meta["step"]
+    return best

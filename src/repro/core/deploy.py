@@ -55,6 +55,9 @@ def emit_round_series(step: int, metrics: dict) -> None:
     nb = metrics.get("wire_nbytes_per_agent")
     if nb is not None:
         trc.series("wire_nbytes_per_agent", step, float(nb))
+    qf = metrics.get("quorum_frac")
+    if qf is not None:
+        trc.series("quorum_frac", step, float(qf))
 
 
 class DeployState(NamedTuple):
@@ -112,10 +115,26 @@ class DeployFedLT:
                            c_down=zeros(p0), k=jnp.zeros((), jnp.int32))
 
     # -- one round ----------------------------------------------------------
-    def round_step(self, state: DeployState, batch, agent_replicate_spec=None):
-        """batch: pytree with leading agent dim A on every leaf."""
+    def round_step(self, state: DeployState, batch,
+                   agent_replicate_spec=None, survivors=None):
+        """batch: pytree with leading agent dim A on every leaf.
+
+        ``survivors`` (optional ``(A,)`` bool) is the quorum mask the
+        host-side round-deadline scheduler hands down (``repro.faults``):
+        a round closed at its deadline aggregates only the agents whose
+        uplinks landed in time.  Excluded agents still train locally,
+        but their wire is dropped from the coordinator mean and their
+        uplink EF cache *reverts* to the full corrected message — the
+        erasure semantics of ``fedlt_sat._revert_lost_wires``, so the
+        straggler's content telescopes into its next landed round
+        instead of vanishing.  ``None`` keeps the all-participate
+        behavior (and the lowered HLO) unchanged."""
         cfg = self.cfg
         inv_rho = 1.0 / self.rho
+        surv = None if survivors is None else jnp.asarray(survivors)
+
+        def _mask(x):
+            return surv.reshape((-1,) + (1,) * (x.ndim - 1))
 
         def local_train(x_i, v_i, batch_i):
             def epoch(w, _):
@@ -205,14 +224,35 @@ class DeployFedLT:
             with jax.named_scope("fedlt.uplink"):
                 pairs = [uplink_leaf(z, c, s)
                          for z, c, s in zip(leaves_z, leaves_c, specs)]
+            if surv is not None:
+                # quorum close: drop excluded wires from the mean, revert
+                # their EF cache to the full corrected message (newc + ŵ
+                # == z + c — GroupedEFChannel.revert's leaf analogue)
+                pairs = [(jnp.where(_mask(g), g, 0.0).astype(g.dtype),
+                          jnp.where(_mask(nc), nc, z + c).astype(nc.dtype))
+                         for (g, nc), z, c
+                         in zip(pairs, leaves_z, leaves_c)]
             gathered = treedef.unflatten([g for g, _ in pairs])
             c_up_new = treedef.unflatten([nc for _, nc in pairs])
             with jax.named_scope("fedlt.aggregate"):
-                z_bar = tree_map(lambda g: jnp.mean(g, axis=0), gathered)
+                if surv is not None:
+                    n_surv = jnp.maximum(jnp.sum(surv), 1)
+                    z_bar = tree_map(
+                        lambda g: (jnp.sum(g, axis=0)
+                                   / n_surv.astype(g.dtype)), gathered)
+                else:
+                    z_bar = tree_map(lambda g: jnp.mean(g, axis=0), gathered)
         else:
             c_up_new = state.c_up
             with jax.named_scope("fedlt.aggregate"):
-                z_bar = tree_map(lambda z: jnp.mean(z, axis=0), z_new)
+                if surv is not None:
+                    n_surv = jnp.maximum(jnp.sum(surv), 1)
+                    z_bar = tree_map(
+                        lambda z: (jnp.sum(jnp.where(_mask(z), z, 0.0)
+                                           .astype(z.dtype), axis=0)
+                                   / n_surv.astype(z.dtype)), z_new)
+                else:
+                    z_bar = tree_map(lambda z: jnp.mean(z, axis=0), z_new)
 
         # ---- coordinator aggregate + downlink EF --------------------------
         with jax.named_scope("fedlt.downlink"):
@@ -233,6 +273,10 @@ class DeployFedLT:
         new_state = DeployState(x=x_new, z=z_new, c_up=c_up_new, y_hat=y_hat,
                                 c_down=c_down_new, k=state.k + 1)
         metrics = {"loss": jnp.mean(last_loss)}
+        if surv is not None:
+            n_agents = surv.shape[0]
+            metrics["quorum_frac"] = (jnp.sum(surv).astype(jnp.float32)
+                                      / jnp.float32(n_agents))
         if self.compress:
             # exact measured uplink size per agent under the wire codec
             # (static shapes → a compile-time constant in the metrics)

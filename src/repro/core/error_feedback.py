@@ -92,6 +92,26 @@ class EFChannel:
                 treedef.unflatten([nc for _, nc in pairs]))
 
 
+def resync_cache(cache, crashed):
+    """Re-sync EF residuals of crashed satellites to zero.
+
+    A radiation-upset crash (``repro.faults``) wipes the satellite's
+    memory — unlike a link erasure, where the sat is alive and
+    :func:`repro.core.fedlt_sat._revert_lost_wires` keeps the residual so
+    the lost content telescopes forward, a crashed sat reboots with an
+    EMPTY cache: the residual's content is simply gone.  ``crashed`` is a
+    ``(N,)`` bool mask over the agent-stacked cache's leading axis;
+    non-crashed rows pass through untouched.
+    """
+    m = jnp.asarray(crashed)
+
+    def leaf(c):
+        mask = m.reshape((-1,) + (1,) * (c.ndim - 1))
+        return jnp.where(mask, jnp.zeros_like(c), c)
+
+    return tree_map(leaf, cache)
+
+
 @dataclasses.dataclass(frozen=True)
 class GroupedEFChannel:
     """Error feedback with residuals held at aggregation *heads* instead

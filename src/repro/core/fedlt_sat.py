@@ -36,8 +36,10 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..constellation.links import message_bytes
+from ..faults import quorum_close_time
 from ..obs.trace import active as _obs_active
 from .compression import Compressor
+from .error_feedback import resync_cache
 from .pytree import tree_map, tree_size, tree_split_keys, tree_where_mask
 
 
@@ -99,6 +101,20 @@ class SpaceRunner:
     #              exact — ties in TopK or zeros in RandD shrink the
     #              accounted payload below the nominal fraction·n
     measure: str = "probe"       # "probe" | "cohort" (sync mode only)
+    # node-level fault injection (repro.faults.FaultModel): installed on
+    # the engine; an engine whose Scenario already carries one needs no
+    # argument here.  Crashed satellites lose their in-flight update AND
+    # their EF residual (resync_cache) — unlike erasures, where
+    # loss_robust keeps the residual telescoping forward.
+    faults: Optional[object] = None
+    # round deadline with quorum (sync mode): the round closes at
+    # t0 + deadline provided ≥ quorum·attempted update-weights landed
+    # (else it extends to the quorum-completing landing); deliveries past
+    # the close are stragglers, treated as erasures so their content
+    # folds into the next round via EF.  None = wait for the last
+    # scheduled delivery (historical behavior).
+    deadline: Optional[float] = None
+    quorum: float = 0.0
 
     def __post_init__(self):
         if hasattr(self.engine, "select") and not hasattr(self.engine, "run_round"):
@@ -113,8 +129,23 @@ class SpaceRunner:
             else:                            # wrapped non-Engine stand-ins
                 self.engine.channel = self.channel
                 self.engine._refresh_blocked()
+        if self.faults is not None:
+            if hasattr(self.engine, "install_faults"):
+                self.engine.install_faults(self.faults)
+            else:                            # wrapped non-Engine stand-ins
+                self.engine.faults = self.faults
+                self.engine._refresh_blocked()
         if self.mode not in ("sync", "async"):
             raise ValueError(f"mode must be 'sync' or 'async', got {self.mode!r}")
+        if self.deadline is not None:
+            if self.mode != "sync":
+                raise ValueError(
+                    "deadline/quorum round closing is sync-only — async "
+                    "FedBuff aggregation has no round boundary to close")
+            if self.deadline <= 0.0:
+                raise ValueError(f"deadline must be > 0: {self.deadline}")
+        if not 0.0 <= self.quorum <= 1.0:
+            raise ValueError(f"quorum must be in [0,1]: {self.quorum}")
         if self.measure not in ("probe", "cohort"):
             raise ValueError(
                 f"measure must be 'probe' or 'cohort', got {self.measure!r}")
@@ -165,12 +196,22 @@ class SpaceRunner:
 
     def run(self, alg, state, data, n_rounds: int, key,
             error_fn: Optional[Callable] = None,
-            log_every: int = 10) -> tuple:
+            log_every: int = 10, ckpt=None, ckpt_every: int = 1,
+            resume: bool = False) -> tuple:
+        """Drive ``n_rounds`` rounds.  ``ckpt`` (a
+        :class:`repro.checkpoint.run.RunCheckpoint`) checkpoints the run
+        every ``ckpt_every`` sync rounds; ``resume=True`` restarts from
+        the newest intact checkpoint and continues bit-identically to an
+        uninterrupted run (sync mode only — the async delivery stream
+        has no round boundary to checkpoint at)."""
         if self.mode == "async":
+            if ckpt is not None or resume:
+                raise ValueError("checkpoint/resume is sync-only")
             return self._run_async(alg, state, data, n_rounds, key,
                                    error_fn, log_every)
         return self._run_sync(alg, state, data, n_rounds, key,
-                              error_fn, log_every)
+                              error_fn, log_every, ckpt=ckpt,
+                              ckpt_every=ckpt_every, resume=resume)
 
     def _cohort_nbytes(self, state, cohorts) -> dict:
         """Measured on-wire bytes per satellite, grouped per cohort.
@@ -204,7 +245,8 @@ class SpaceRunner:
         return out
 
     # -- synchronous rounds ------------------------------------------------
-    def _run_sync(self, alg, state, data, n_rounds, key, error_fn, log_every):
+    def _run_sync(self, alg, state, data, n_rounds, key, error_fn, log_every,
+                  ckpt=None, ckpt_every: int = 1, resume: bool = False):
         msg = self._msg_bytes(state)
         use_cohorts = (self.measure == "cohort" and self.compressor is not None
                        and self.compressor.wire_codec() is not None)
@@ -216,7 +258,33 @@ class SpaceRunner:
         logs: List[RoundLog] = []
         keys = jax.random.split(key, n_rounds)
         trc = _obs_active()       # read once; None ⇒ tracing fully off
-        for k in range(n_rounds):
+        start_k = 0
+        if ckpt is not None and resume:
+            loaded = ckpt.load(like=state)
+            if loaded is not None:
+                # bit-identical continuation: per-round keys come from the
+                # same split above, engine rounds are pure functions of
+                # (scenario, seed, t0), and the time cursor / accumulators
+                # restore exactly — so rounds ≥ start_k replay the
+                # uninterrupted run's floats
+                state, meta = loaded
+                start_k = int(meta.get("k_next", 0))
+                t = float(meta.get("t", 0.0))
+                up_bytes = float(meta.get("up_bytes", 0.0))
+                isl_bytes = float(meta.get("isl_bytes", 0.0))
+                logs = [RoundLog(**d) for d in meta.get("logs", [])]
+                if hasattr(self.engine, "_round_idx"):
+                    self.engine._round_idx = start_k   # trace round labels
+                if trc is not None:
+                    # replay the prefix's ledger curves so a resumed
+                    # trace carries the full bit-identical series
+                    trc.event("resume", k_next=start_k, t=float(t),
+                              bytes_up=float(up_bytes))
+                    for lg in logs:
+                        trc.series("bytes_up", lg.round, lg.bytes_up)
+                        if lg.error is not None:
+                            trc.series("e_K", lg.round, lg.error)
+        for k in range(start_k, n_rounds):
             if trc is None:
                 res = self.engine.run_round(t, msg)
             else:
@@ -236,8 +304,35 @@ class SpaceRunner:
             else:
                 for d in res.deliveries:
                     attempted[d.sat] = True
+            aborted = getattr(res, "aborted", None)
+            if aborted is not None:
+                # updates destroyed in-orbit with no delivery record
+                # (head-failover collateral): attempted-but-lost
+                attempted = attempted | aborted
+            crashed = getattr(res, "crashed", None)
+            duration = res.duration
+            if self.deadline is not None:
+                # quorum round closing: the coordinator stops waiting at
+                # t_close; anything landing later is a straggler whose
+                # wire (and, with loss_robust, residual) reverts below —
+                # its content folds into the next round via EF
+                landed = [(d.t_done,
+                           len(merged[d.sat]) if merged is not None else 1)
+                          for d in res.deliveries if d.delivered]
+                t_close = quorum_close_time(
+                    t_round0, self.deadline, self.quorum, landed,
+                    int(attempted.sum()))
+                late = np.zeros_like(delivered)
+                for d in res.deliveries:
+                    if d.delivered and d.t_done > t_close:
+                        if merged is not None:
+                            late[list(merged[d.sat])] = True
+                        else:
+                            late[d.sat] = True
+                delivered = delivered & ~late
+                duration = max(t_close - t_round0, 0.0)
             lost = attempted & ~delivered
-            lossy = channel is not None and bool(lost.any())
+            lossy = bool(lost.any())
             # with a lossy channel the satellites that transmitted-but-lost
             # still trained and paid the uplink: they participate in the
             # round, then the coordinator-side wire is reverted below
@@ -275,8 +370,20 @@ class SpaceRunner:
                               resid_norm=float(np.sqrt(norm2)))
                     trc.metrics.counter("ef_reverts").add(float(lost.sum()))
                     trc.series("ef_resid_norm", k, float(np.sqrt(norm2)))
+            if crashed is not None and bool(crashed.any()) and has_cache:
+                # crash semantics: the rebooted sat's memory is gone, so
+                # the erasure revert above (which KEEPS the residual) is
+                # overridden for crashed rows — c_up re-syncs to zero
+                state_new = state_new._replace(
+                    c_up=resync_cache(state_new.c_up, crashed))
+                if trc is not None:
+                    trc.event("ef_resync", round=k,
+                              n_crashed=int(crashed.sum()),
+                              sats=[int(s) for s in np.nonzero(crashed)[0]])
+                    trc.metrics.counter("ef_resyncs").add(
+                        float(crashed.sum()))
             state = state_new
-            t += res.duration
+            t += duration
             # bytes_up = what actually crossed the GS links this round —
             # air bytes, i.e. retransmissions and truncated attempts count
             if use_cohorts:
@@ -318,8 +425,19 @@ class SpaceRunner:
                 n_att = int(attempted.sum())
                 trc.series("lost_frac", k,
                            float(lost.sum()) / n_att if n_att else 0.0)
+                # quorum/fault observability: who made it into this
+                # round's aggregate, and what fraction of the attempted
+                # cohort that is (1.0 on a healthy deadline-less round)
+                n_surv = int(delivered.sum())
+                trc.series("survivors", k, float(n_surv))
+                trc.series("quorum_frac", k,
+                           n_surv / n_att if n_att else 1.0)
                 if err is not None and err == err:
                     trc.series("e_K", k, err)
+            if ckpt is not None and ((k + 1) % ckpt_every == 0
+                                     or k == n_rounds - 1):
+                ckpt.save_round(state, step=k + 1, t=t, up_bytes=up_bytes,
+                                isl_bytes=isl_bytes, logs=logs)
         return state, logs
 
     # -- buffered-async (FedBuff-style) -------------------------------------

@@ -41,7 +41,7 @@ DEFAULT_LEDGER = os.path.join("runs", "ledger.jsonl")
 
 # header-meta keys promoted to top-level ledger fields
 _PROMOTED = ("scenario", "algorithm", "compressor", "channel", "mode",
-             "topology")
+             "topology", "faults")
 
 
 def git_sha() -> str:

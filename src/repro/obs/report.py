@@ -159,6 +159,28 @@ def plane_agg_rows(entries: Sequence[dict]) -> List[dict]:
     return rows
 
 
+def fault_tolerance_rows(entries: Sequence[dict]) -> List[dict]:
+    """The ``benchmarks/table_fault_tolerance.py`` row dicts, rebuilt
+    purely from ledger entries (meta: ``crash_rate``/``arm``/``quorum``;
+    promoted ``faults``; final: e_K / bytes_up / n_lost; series:
+    ``survivors``/``quorum_frac``) — same no-recomputation contract as
+    :func:`lossy_ef_rows`."""
+    rows = []
+    for e in entries:
+        meta, f = e.get("meta", {}), e.get("final", {})
+        if "crash_rate" not in meta or "arm" not in meta:
+            continue
+        qf = e.get("series", {}).get("quorum_frac", {"values": []})["values"]
+        rows.append(dict(crash_rate=meta["crash_rate"], arm=meta["arm"],
+                         quorum=meta.get("quorum", 0.0),
+                         faults=e.get("faults"),
+                         error=f.get("e_K"), bytes_up=f.get("bytes_up"),
+                         lost=f.get("n_lost", 0),
+                         t_sim=f.get("t"),
+                         quorum_frac=(sum(qf) / len(qf)) if qf else None))
+    return rows
+
+
 # ---------------------------------------------------------------------------
 # live watch (reader-side tail of a growing trace)
 # ---------------------------------------------------------------------------
@@ -298,6 +320,14 @@ CANONICAL: Dict[str, dict] = {
         scenario="mega-1000", mode="async", rounds=8, loss=None,
         n_agents=1000, dim=8, m=16, buffer_size=64,
         gamma=0.02, rho=2.0),
+    # the chaos gate (ISSUE 10): scale + erasures + radiation-upset
+    # crashes + station blackouts, rounds closed by a quorum deadline —
+    # drifting fault draws, broken residual re-sync, or a changed quorum
+    # policy all move this curve
+    "sync-mega-chaos": dict(
+        scenario="mega-1000-chaos", mode="sync", rounds=8, loss=None,
+        n_agents=1000, dim=8, m=16, deadline=45.0, quorum=0.7,
+        gamma=0.02, rho=2.0),
 }
 CANONICAL_SEED = 7
 
@@ -341,6 +371,9 @@ def run_canonical(name: str, *, ef: bool = True, loss_robust: bool = True,
             arq=SelectiveRepeatARQ(seg_bytes=4096, max_rounds=1))
     runner_kw: dict = dict(compressor=quant, channel=channel,
                            loss_robust=loss_robust)
+    if cfg.get("deadline") is not None:
+        runner_kw.update(deadline=cfg["deadline"],
+                         quorum=cfg.get("quorum", 0.0))
     if cfg["mode"] == "async":
         runner_kw.update(mode="async", buffer_size=cfg["buffer_size"],
                          staleness_alpha=0.5)

@@ -28,9 +28,11 @@ from .trace import HOST_FIELDS
 # internals, host timing, or channel implementation details
 # (head_elect: per-plane cluster-head elections under in-orbit
 # aggregation topologies — a pure function of the contact plan, so fast
-# and oracle must agree on it too)
+# and oracle must agree on it too; fault/head_failover: injected faults
+# are counter-based draws on the shared delivery timeline, so the fault
+# streams of equivalent engines must also be bit-identical)
 DIFF_KINDS = ("round", "delivery", "arq", "cohort", "async_run",
-              "head_elect")
+              "head_elect", "fault", "head_failover")
 
 # fields legitimately differing between equivalent traces: host clocks
 # and the engine tag ("fast"/"oracle") on round records

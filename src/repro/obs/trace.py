@@ -29,6 +29,13 @@ Event kinds emitted by the instrumented stack:
     ``async_run``  summary of one ``Engine.run_async`` stream
     ``fl_round``   one federated round (SpaceRunner: bytes, error, staleness)
     ``ef_revert``  loss-robust EF revert (lost sats + residual norm)
+    ``ef_resync``  crash residual re-sync (crashed sats rebooted with an
+                   empty EF cache — see :mod:`repro.faults`)
+    ``fault``      one injected fault (sat crash, per :mod:`repro.faults`)
+    ``head_failover``  a cluster-head failure mid-convergecast: salvage
+                   counts + the re-elected head (``repro.sim.topology``)
+    ``resume``     a crash-consistent restart from a run checkpoint
+                   (:mod:`repro.checkpoint.run`)
     ``kernel``     one kernel-dispatch span (repro.kernels.ops)
     ``span``       generic host-time stage span
     ``link``       channel link-budget sample (elevation, fade, p_seg)
@@ -286,11 +293,27 @@ def tracing(path: Optional[str] = None,
 
 
 def load(path: str) -> List[dict]:
-    """Read a JSONL trace file back into a record list (``.gz`` ok)."""
+    """Read a JSONL trace file back into a record list (``.gz`` ok).
+
+    Tolerates a truncated FINAL line — the signature a streaming writer
+    leaves when its process is killed mid-append: the valid prefix is
+    returned with a :class:`UserWarning` instead of raising
+    ``JSONDecodeError``, so ``summarize`` / ``watch`` / ``ingest`` can
+    still read everything the run managed to record.  A malformed line
+    anywhere *before* the last one is real corruption and still raises."""
     records = []
     with _open(path, "rt") as f:
-        for line in f:
-            line = line.strip()
-            if line:
-                records.append(json.loads(line))
+        lines = [ln for ln in (ln.strip() for ln in f) if ln]
+    for i, line in enumerate(lines):
+        try:
+            records.append(json.loads(line))
+        except json.JSONDecodeError:
+            if i == len(lines) - 1:
+                import warnings
+                warnings.warn(
+                    f"{path}: truncated final record dropped (writer "
+                    f"killed mid-append?) — recovered {len(records)} "
+                    f"records", stacklevel=2)
+                break
+            raise
     return records

@@ -71,6 +71,9 @@ class Scenario:
     # convergecast to an elected cluster head), "gossip" (plane + paired
     # inter-head merge) or a Topology instance
     topology: Optional[object] = None
+    # node-level fault injection (repro.faults.FaultModel): satellite
+    # crash/reboot, ground-station blackouts, cluster-head failure
+    faults: Optional[object] = None
 
     def compute_of(self, sat: int) -> float:
         if np.ndim(self.compute_time) == 0:
@@ -181,6 +184,13 @@ class RoundResult:
     # uplinking head -> every satellite its merged wire sums (None: direct)
     merged: Optional[Dict[int, Tuple[int, ...]]] = None
     heads: Optional[Dict[int, int]] = None   # plane -> elected head
+    # fault injection (repro.faults) — None on fault-free rounds:
+    crashed: Optional[np.ndarray] = None   # bool (S,) — sats whose memory
+    #                                        (EF residual) was wiped
+    aborted: Optional[np.ndarray] = None   # bool (S,) — updates destroyed
+    #                                        in-orbit with no delivery record
+    faults: Optional[List[dict]] = None       # `fault` event records
+    failovers: Optional[List[dict]] = None    # `head_failover` event records
 
     def cohorts(self) -> List[Cohort]:
         """Per-(station, contact-window) delivery cohorts (see
@@ -203,6 +213,14 @@ class RoundResult:
                              for h, ms in self.merged.items()}
             out["heads"] = {str(p): int(h)
                             for p, h in (self.heads or {}).items()}
+        if self.crashed is not None:
+            out["crashed"] = [bool(b) for b in self.crashed]
+        if self.aborted is not None:
+            out["aborted"] = [bool(b) for b in self.aborted]
+        if self.faults:
+            out["faults"] = [dict(ev) for ev in self.faults]
+        if self.failovers:
+            out["failovers"] = [dict(ev) for ev in self.failovers]
         return out
 
     @classmethod
@@ -219,7 +237,13 @@ class RoundResult:
                        int(h): tuple(ms) for h, ms in merged.items()},
                    heads=None if merged is None else {
                        int(p): int(h)
-                       for p, h in d.get("heads", {}).items()})
+                       for p, h in d.get("heads", {}).items()},
+                   crashed=(None if "crashed" not in d else
+                            np.asarray(d["crashed"], dtype=bool)),
+                   aborted=(None if "aborted" not in d else
+                            np.asarray(d["aborted"], dtype=bool)),
+                   faults=d.get("faults"),
+                   failovers=d.get("failovers"))
 
 
 # ---------------------------------------------------------------------------
@@ -304,10 +328,19 @@ def _emit_round_trace(trc, res: "RoundResult", engine: str, k: int) -> None:
                       uplinker=int(uplinker_of.get(h, h)),
                       n_merged=len(res.merged.get(
                           uplinker_of.get(h, h), ())))
+    # fault injection (repro.faults): both engines run the identical
+    # shared post-filter, so these streams are DIFF kinds like delivery
+    for ev in res.faults or ():
+        trc.event("fault", round=k, **ev)
+        mtr.counter("faults").add(1.0, what=ev.get("what", "?"))
+    for ev in res.failovers or ():
+        trc.event("head_failover", round=k, **ev)
+        mtr.counter("faults").add(1.0, what="head_failure")
 
 
 def _emit_async_trace(trc, deliveries: Sequence[Delivery], engine: str,
-                      run: int, t0: float, n_requested: int) -> None:
+                      run: int, t0: float, n_requested: int,
+                      fault_events: Sequence[dict] = ()) -> None:
     """Emit one async run's records: per-delivery (``round=None``,
     tagged with the run index) plus a closing ``async_run`` summary."""
     mtr = trc.metrics
@@ -337,6 +370,9 @@ def _emit_async_trace(trc, deliveries: Sequence[Delivery], engine: str,
                       retries=int(d.retries), delivered=bool(d.delivered),
                       nbytes_attempted=float(d.nbytes_attempted),
                       t_done=float(d.t_done))
+    for ev in fault_events:
+        trc.event("fault", round=None, run=run, **ev)
+        mtr.counter("faults").add(1.0, what=ev.get("what", "?"))
     t_end = max((d.t_done for d in deliveries), default=t0)
     trc.event("async_run", run=run, t0=float(t0),
               n_requested=int(n_requested), n_deliveries=len(deliveries),
@@ -348,6 +384,128 @@ def _emit_async_trace(trc, deliveries: Sequence[Delivery], engine: str,
     if deliveries:
         trc.series("async_lost_frac", run,
                    (len(deliveries) - n_ok) / len(deliveries))
+
+
+def _check_faults_compatible(faults, topology) -> None:
+    """Head-failure injection needs the plane convergecast's failover
+    machinery; the gossip pair-merge has no re-election analogue yet."""
+    if (faults is not None and getattr(faults, "head_enabled", False)
+            and getattr(topology, "gossip", False)):
+        raise ValueError(
+            "head_failure_rate > 0 supports topology='direct'/'plane' "
+            "only — gossip pair-merge failover is not modeled "
+            f"(topology={topology.name!r})")
+
+
+def _apply_sync_faults(eng: "Engine", res: RoundResult) -> RoundResult:
+    """Shared satellite-crash post-filter for sync rounds (both engines).
+
+    Runs AFTER either engine produced its (bit-identical) result, so the
+    fault timeline is bit-identical by construction.  Crash draws are
+    keyed on (sat, bits(t_start)) — see :mod:`repro.faults.process`.
+
+    * direct rounds: an upset during a flight ``[t_start, t_done]``
+      destroys the in-flight update — the delivery flips to lost.
+    * plane rounds: an upset during a *member's* local training destroys
+      its contribution before it enters the plane sum (the merged wire
+      still flies, one slot lighter); uplinking heads are handled by the
+      head-failover machinery in :mod:`repro.sim.topology` instead.
+
+    Either way the crashed sat reboots with wiped memory: ``res.crashed``
+    marks it for the EF residual re-sync in
+    :class:`repro.core.fedlt_sat.SpaceRunner` (residual LOST — unlike an
+    erasure, where the residual is kept and telescopes forward).
+    """
+    fm = eng.faults
+    events: List[dict] = []
+    crashed = (res.crashed.copy() if res.crashed is not None
+               else np.zeros(len(res.mask), dtype=bool))
+    mask = res.mask
+    deliveries = res.deliveries
+    if res.merged is None:
+        if deliveries:
+            sats = np.array([d.sat for d in deliveries], dtype=np.int64)
+            t_s = np.array([d.t_start for d in deliveries])
+            exp = np.array([d.t_done for d in deliveries]) - t_s
+            hit = fm.crash_mask(eng.seed, sats, t_s, exp)
+            if hit.any():
+                t_crash = fm.crash_times(eng.seed, sats, t_s, exp)
+                mask = mask.copy()
+                deliveries = list(deliveries)
+                for i, d in enumerate(deliveries):
+                    if not hit[i]:
+                        continue
+                    crashed[d.sat] = True
+                    mask[d.sat] = False
+                    events.append(dict(
+                        what="sat_crash", sat=int(d.sat),
+                        t_crash=float(t_crash[i]),
+                        t_start=float(d.t_start), station=int(d.station),
+                        in_flight=bool(d.delivered)))
+                    deliveries[i] = dataclasses.replace(
+                        d, delivered=False, nbytes=0.0)
+    else:
+        uplinkers = set(res.merged.keys())
+        members = sorted(
+            s for ms in res.merged.values() for s in ms
+            if s not in uplinkers)
+        if members:
+            sats = np.asarray(members, dtype=np.int64)
+            t_s = np.full(len(members), res.t0)
+            exp = np.array([eng.scenario.compute_of(s) for s in members])
+            hit = fm.crash_mask(eng.seed, sats, t_s, exp)
+            if hit.any():
+                t_crash = fm.crash_times(eng.seed, sats, t_s, exp)
+                mask = mask.copy()
+                for i, s in enumerate(members):
+                    if not hit[i]:
+                        continue
+                    crashed[s] = True
+                    mask[s] = False
+                    events.append(dict(
+                        what="sat_crash", sat=int(s),
+                        t_crash=float(t_crash[i]),
+                        t_start=float(res.t0), station=None,
+                        in_flight=True))
+    if not events and res.crashed is None:
+        return res
+    return dataclasses.replace(
+        res, mask=mask, deliveries=deliveries,
+        crashed=crashed if crashed.any() else res.crashed,
+        faults=(list(res.faults or ()) + events) or None)
+
+
+def _apply_async_faults(eng: "Engine", records: List[Delivery]
+                        ) -> Tuple[List[Delivery], List[dict]]:
+    """Shared satellite-crash post-filter for async runs (both engines).
+
+    An upset during a flight destroys the in-flight update (the record
+    flips to lost); the sat reboots and keeps training.  The async path
+    has no EF revert machinery, so a crash here costs exactly the update
+    — the residual-wipe semantics only bind in sync mode.
+    """
+    fm = eng.faults
+    if not records:
+        return records, []
+    sats = np.array([d.sat for d in records], dtype=np.int64)
+    t_s = np.array([d.t_start for d in records])
+    exp = np.array([d.t_done for d in records]) - t_s
+    ok = np.array([d.delivered for d in records], dtype=bool)
+    hit = fm.crash_mask(eng.seed, sats, t_s, exp) & ok
+    if not hit.any():
+        return records, []
+    t_crash = fm.crash_times(eng.seed, sats, t_s, exp)
+    events: List[dict] = []
+    out = list(records)
+    for i, d in enumerate(out):
+        if not hit[i]:
+            continue
+        events.append(dict(what="sat_crash", sat=int(d.sat),
+                           t_crash=float(t_crash[i]),
+                           t_start=float(d.t_start),
+                           station=int(d.station), in_flight=True))
+        out[i] = dataclasses.replace(d, delivered=False, nbytes=0.0)
+    return out, events
 
 
 class Engine:
@@ -378,6 +536,8 @@ class Engine:
         self.topology = make_topology(scenario.topology)
         check_plane_compatible(scenario, self.topology)
         self.channel = scenario.channel   # repro.channel.ChannelModel | None
+        self.faults = scenario.faults     # repro.faults.FaultModel | None
+        _check_faults_compatible(self.faults, self.topology)
         self.plan = ContactPlan(scenario.walker, scenario.stations,
                                 horizon=max(2 * scenario.lookahead, 7200.0),
                                 dt=scenario.dt)
@@ -410,9 +570,16 @@ class Engine:
         (:class:`repro.channel.outage.ConjunctionBlackout` on the
         scenario's channel) are deterministic functions of the rise time
         and layer into the same mask: a window whose rise falls inside a
-        blackout is unusable."""
+        blackout is unusable.  Ground-station blackout faults
+        (:class:`repro.faults.FaultModel` ``gs_outage_rate``) layer in the
+        same way — a window rising inside a dark slot of its station is
+        unusable, which forces re-routing through other stations /
+        windows / relays identically in BOTH engines (they consume the
+        same mask)."""
         blackout = getattr(self.channel, "blackout", None)
-        if self.scenario.dropout <= 0.0 and blackout is None:
+        fm = self.faults
+        gs_out = fm is not None and getattr(fm, "gs_enabled", False)
+        if self.scenario.dropout <= 0.0 and blackout is None and not gs_out:
             self._blocked = [None] * self.plan.n_stations
             return
         blocked = []
@@ -446,6 +613,10 @@ class Engine:
                 phase = (np.where(finite, rises, 0.0)
                          - g * blackout.station_phase) % blackout.period
                 b = b | (finite & (phase < blackout.duration))
+            if gs_out:
+                dark = fm.station_dark(self.seed, g,
+                                       np.where(finite, rises, 0.0))
+                b = b | (finite & dark)
             blocked.append(b)
         self._blocked = blocked
         trc = _obs_active()
@@ -491,6 +662,18 @@ class Engine:
         self.channel = channel
         self._chan_cache = None           # drop memoized plans/estimates
         self._refresh_blocked()           # re-layer conjunction blackouts
+
+    def install_faults(self, faults) -> None:
+        """Install (or clear) a fault model post-construction.
+
+        The supported mutation path, mirroring :meth:`install_channel`:
+        ground-station blackout faults live in the blocked-window mask,
+        so the mask must be recomputed whenever the model changes.
+        (:class:`repro.core.fedlt_sat.SpaceRunner` and
+        :class:`repro.api.Experiment` route through here.)"""
+        _check_faults_compatible(faults, self.topology)
+        self.faults = faults
+        self._refresh_blocked()           # re-layer GS outage slots
 
     def usable_window(self, sat: int, t: float
                       ) -> Optional[Tuple[float, float, int]]:
@@ -576,6 +759,8 @@ class Engine:
             res = run_round_fast(self, t0, msg_bytes)
         else:
             res = self._run_round_oracle(t0, msg_bytes)
+        if self.faults is not None and self.faults.crashes_enabled:
+            res = _apply_sync_faults(self, res)
         k, self._round_idx = self._round_idx, self._round_idx + 1
         if trc is not None:
             engine = "fast" if self.fast else "oracle"
@@ -730,11 +915,15 @@ class Engine:
         else:
             out = self._run_async_oracle(t0, msg_bytes, n_deliveries,
                                          max_time=max_time)
+        fault_events: List[dict] = []
+        if self.faults is not None and self.faults.crashes_enabled:
+            out, fault_events = _apply_async_faults(self, out)
         run, self._async_idx = self._async_idx, self._async_idx + 1
         if trc is not None:
             engine = "fast" if self.fast else "oracle"
             trc.prof.begin("trace_emit")
-            _emit_async_trace(trc, out, engine, run, t0, n_deliveries)
+            _emit_async_trace(trc, out, engine, run, t0, n_deliveries,
+                              fault_events)
             trc.prof.end()
             trc.prof.flush(trc, engine=engine, mode="async", run=run,
                            wall=time.perf_counter() - t_wall)

@@ -35,6 +35,17 @@ comparison needs:
                         3 ARQ rounds — scale + loss combined, with a real
                         (~14 %) lost-delivery fraction
 
+  fault-injection scenarios (``Scenario.faults``, :mod:`repro.faults`):
+
+    chaos-direct        walker-kiruna with radiation-upset crashes and
+                        ground-station blackouts (fault-equivalence smoke)
+    chaos-plane         plane aggregation with mid-convergecast head
+                        failures → timeout re-election + partial salvage
+    chaos-lossy         erasures and crashes composed in one round
+    mega-1000-chaos     the headline robustness regime: scale + loss +
+                        crashes + station blackouts
+    mega-1000-chaos-plane   the same at plane topology with head failover
+
 Usage::
 
     from repro.sim import get_scenario, Engine
@@ -53,6 +64,7 @@ import numpy as np
 from ..channel import (ChannelModel, ConjunctionBlackout, LinkBudget,
                        RainFade, SelectiveRepeatARQ)
 from ..constellation.orbits import GroundStation, Walker
+from ..faults import FaultModel
 from .engine import Scenario
 
 SCENARIOS: Dict[str, Callable[[], Scenario]] = {}
@@ -238,3 +250,78 @@ def _mega_1000_lossy() -> Scenario:
                     channel=ChannelModel(
                         loss=0.25,
                         arq=SelectiveRepeatARQ(seg_bytes=1024, max_rounds=3)))
+
+
+# ---------------------------------------------------------------------------
+# fault-injection scenarios (repro.faults) — node- and station-level
+# failures layered on top of link impairments.  Fault draws are
+# counter-based (seed, namespace, entity, time-bits), so the factories
+# stay RNG-free and both engines see identical faults.
+# ---------------------------------------------------------------------------
+
+@register("chaos-direct")
+def _chaos_direct() -> Scenario:
+    # the seed geometry with radiation upsets + ground-station blackouts:
+    # ~8 % of flights crash mid-round (losing the in-flight update AND
+    # the EF residual) and Kiruna goes dark in ~15 % of half-hour slots —
+    # the small fast-vs-oracle fault-equivalence scenario
+    return Scenario(name="chaos-direct", walker=Walker(),
+                    stations=(KIRUNA,),
+                    faults=FaultModel(crash_rate=0.08,
+                                      gs_outage_rate=0.15,
+                                      gs_outage_duration=1800.0))
+
+
+@register("chaos-plane")
+def _chaos_plane() -> Scenario:
+    # per-plane convergecast under head failures: ~30 % of head uplinks
+    # die mid-convergecast, triggering timeout re-election and partial-
+    # sum salvage; member crashes exercise the residual re-sync path
+    return Scenario(name="chaos-plane", walker=Walker(),
+                    stations=(KIRUNA,), topology="plane",
+                    faults=FaultModel(crash_rate=0.05,
+                                      head_failure_rate=0.30,
+                                      failover_timeout=60.0))
+
+
+@register("chaos-lossy")
+def _chaos_lossy() -> Scenario:
+    # erasures AND crashes in the same round: link losses revert wires
+    # but keep residuals, crashes wipe both — the scenario where the two
+    # EF semantics (revert vs re-sync) must compose correctly
+    return Scenario(name="chaos-lossy", walker=Walker(), stations=(KIRUNA,),
+                    channel=ChannelModel(
+                        loss=0.10,
+                        arq=SelectiveRepeatARQ(seg_bytes=1024, max_rounds=4)),
+                    faults=FaultModel(crash_rate=0.08))
+
+
+@register("mega-1000-chaos")
+def _mega_1000_chaos() -> Scenario:
+    # the headline robustness regime (benchmarks/table_fault_tolerance.py
+    # and the chaos convergence gate): mega-1000 over a lossy channel with
+    # per-flight radiation upsets and recurring station blackouts
+    return Scenario(name="mega-1000-chaos",
+                    walker=Walker(n_sats=1000, n_planes=20),
+                    stations=(KIRUNA, SVALBARD, INUVIK),
+                    k_direct=8, n_relay=4, max_hops=6,
+                    channel=ChannelModel(
+                        loss=0.10,
+                        arq=SelectiveRepeatARQ(seg_bytes=1024, max_rounds=3)),
+                    faults=FaultModel(crash_rate=0.05,
+                                      gs_outage_rate=0.10,
+                                      gs_outage_duration=1800.0))
+
+
+@register("mega-1000-chaos-plane")
+def _mega_1000_chaos_plane() -> Scenario:
+    # the in-orbit aggregation variant: 20 planes convergecast to heads
+    # while ~20 % of head uplinks fail mid-round — failover + partial-sum
+    # salvage at mega-constellation scale
+    return Scenario(name="mega-1000-chaos-plane",
+                    walker=Walker(n_sats=1000, n_planes=20),
+                    stations=(KIRUNA, SVALBARD, INUVIK),
+                    max_hops=6, topology="plane",
+                    faults=FaultModel(crash_rate=0.03,
+                                      head_failure_rate=0.20,
+                                      failover_timeout=60.0))

@@ -395,6 +395,125 @@ def _uplink_heads(eng, ready: List[Tuple[int, float]], msg_bytes: float,
 
 
 # ---------------------------------------------------------------------------
+# cluster-head failure + timeout-triggered failover (repro.faults)
+# ---------------------------------------------------------------------------
+
+def _apply_head_failures(eng, plan: PlanePlan, ready: List[Tuple[int, float]],
+                         t0: float, msg_bytes: float):
+    """Inject cluster-head failures mid-convergecast and fail over.
+
+    ONE shared implementation consumed after either engine's aggregation
+    timing (:func:`agg_ready_fast` / :func:`agg_ready_oracle`), so the
+    failover timeline is bit-identical across engines by construction.
+    The failure draw is keyed on ``(plane, bits(t0))`` (see
+    :mod:`repro.faults.process`); a firing head fails at
+    ``t_f = t0 + frac · (t_ready − t0)``.
+
+    Salvage granularity is the convergecast *arc*: each arc's partial sum
+    arrives at the head as one message, so an arc whose arrival precedes
+    ``t_f`` was already absorbed by the dead head (its members' updates
+    are lost with it), while an arc still in flight is held at its
+    near-most member and can be re-routed.  After a ``failover_timeout``
+    detection delay the surviving members re-elect a head (same criterion
+    as the original election — earliest usable GS window, ties to the low
+    sat id, lookahead horizon) and surviving partials forward
+    ``ring-distance`` extra ISL hops to it; the new head uplinks the
+    partial plane sum.  No eligible survivor → the plane skips the round.
+
+    EF semantics: the failed head *crashed* (residual LOST — marked in
+    ``crashed``); absorbed-arc members and stranded survivors are alive
+    and merely lost their in-flight updates (*erasure*: residual kept,
+    marked in ``aborted`` so the runner counts them attempted-but-lost).
+
+    Returns ``(ready', extra_isl_transfers, failover_events, crashed,
+    aborted)`` and updates ``plan`` (uplinkers / merged / hops_of) in
+    place; with no firing draw everything passes through unchanged.
+    """
+    sc = eng.scenario
+    fm = eng.faults
+    w = sc.walker
+    spp = w.sats_per_plane
+    n = w.n_sats
+    ready_vec = t0 + np.broadcast_to(
+        np.asarray(sc.compute_time, dtype=np.float64), (n,))
+    hop = sc.link.isl_time(msg_bytes, hops=1)
+    crashed = np.zeros(n, dtype=bool)
+    aborted = np.zeros(n, dtype=bool)
+    events: List[dict] = []
+    extra_transfers = 0
+    out_ready: List[Tuple[int, float]] = []
+    for h, t_ready in ready:
+        p = h // spp
+        frac = fm.head_failure(eng.seed, p, t0)
+        if frac is None:
+            out_ready.append((h, t_ready))
+            continue
+        t_f = t0 + frac * max(t_ready - t0, 0.0)
+        t_detect = t_f + fm.failover_timeout
+        up, down = plan.arcs[h]
+        lost = [h]
+        surv_arcs: List[Tuple[List[int], float]] = []
+        for chain in (up, down):
+            if not chain:
+                continue
+            arr = _arc_arrival_fold(chain, ready_vec, hop)
+            if arr <= t_f:
+                lost.extend(chain)         # absorbed by the dead head
+            else:
+                surv_arcs.append((chain, arr))
+        crashed[h] = True
+        aborted[lost] = True
+        survivors = [s for chain, _ in surv_arcs for s in chain]
+        new_head = None
+        if survivors:
+            best = None
+            for s in sorted(survivors):
+                win = eng.usable_window(s, max(float(ready_vec[s]),
+                                               t_detect))
+                if win is None or win[0] > t0 + sc.lookahead:
+                    continue
+                key = (win[0], s)
+                if best is None or key < best[0]:
+                    best = (key, s)
+            if best is not None:
+                new_head = best[1]
+        if new_head is None:
+            # nobody can take over inside the horizon: the plane skips
+            # the round; stranded survivors keep their residuals (erasure)
+            aborted[survivors] = True
+            plan.uplinkers.remove(h)
+            del plan.merged[h]
+            plan.hops_of.pop(h, None)
+            events.append(dict(plane=int(p), head=int(h), new_head=None,
+                               t_fail=float(t_f), t_detect=float(t_detect),
+                               n_lost=len(lost), n_salvaged=0,
+                               extra_hops=0))
+            continue
+        t_new = t_detect
+        extra = 0
+        max_d = 0
+        for chain, arr in surv_arcs:
+            near = chain[-1]               # holds the in-flight partial
+            d = _ring_dist(near - p * spp, new_head - p * spp, spp)
+            t_new = max(t_new, max(arr, t_detect) + d * hop)
+            extra += d
+            max_d = max(max_d, d)
+        extra_transfers += extra
+        plan.uplinkers[plan.uplinkers.index(h)] = new_head
+        plan.merged[new_head] = tuple(sorted(survivors))
+        del plan.merged[h]
+        plan.hops_of[new_head] = plan.hops_of.pop(h) + max_d
+        events.append(dict(plane=int(p), head=int(h), new_head=int(new_head),
+                           t_fail=float(t_f), t_detect=float(t_detect),
+                           n_lost=len(lost), n_salvaged=len(survivors),
+                           extra_hops=int(extra)))
+        out_ready.append((new_head, float(t_new)))
+    if not events:
+        return ready, 0, None, None, None
+    return out_ready, extra_transfers, events, crashed, aborted
+
+
+# ---------------------------------------------------------------------------
 # round driver
 # ---------------------------------------------------------------------------
 
@@ -420,6 +539,12 @@ def run_round_plane(eng, t0: float, msg_bytes: float):
         ready = agg_ready_fast(eng, plan, t0, msg_bytes)
     else:
         ready = agg_ready_oracle(eng, plan, t0, msg_bytes)
+    failovers = crashed = aborted = None
+    fm = getattr(eng, "faults", None)
+    if fm is not None and fm.head_enabled:
+        ready, extra_isl, failovers, crashed, aborted = \
+            _apply_head_failures(eng, plan, ready, t0, msg_bytes)
+        bytes_isl += extra_isl * msg_bytes
     done = _uplink_heads(eng, ready, msg_bytes, use_cache=eng.fast)
     deliveries = [
         Delivery(sat=h, t_done=td, t_start=t0, gateway=h, station=stn,
@@ -433,4 +558,5 @@ def run_round_plane(eng, t0: float, msg_bytes: float):
                 if deliveries else sc.max_compute)
     return RoundResult(mask, float(duration), deliveries, scheduled, t0,
                        bytes_isl=float(bytes_isl),
-                       merged=dict(plan.merged), heads=dict(plan.heads))
+                       merged=dict(plan.merged), heads=dict(plan.heads),
+                       crashed=crashed, aborted=aborted, failovers=failovers)

@@ -31,6 +31,7 @@ SIMWIRE_MODULES = {
     "test_obs_prof",
     "test_topology",
     "test_api",
+    "test_faults",
 }
 
 

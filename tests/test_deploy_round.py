@@ -59,6 +59,40 @@ def test_compressed_tracks_uncompressed():
     assert max_dev < 1e-2
 
 
+def test_quorum_survivor_mask():
+    """``survivors=`` (the host-side quorum close, repro.faults): the
+    coordinator mean covers survivors only; an excluded agent's wire is
+    dropped and its uplink EF cache reverts to the full corrected
+    message (erasure semantics), so nothing is silently discarded."""
+    batch = _batches(2, jax.random.PRNGKey(8))
+    alg = DeployFedLT(cfg=CFG, n_epochs=1, gamma=0.05, rho=10.0,
+                      compress=True, levels=255, vmin=-4.0, vmax=4.0)
+    state = alg.init(jax.random.PRNGKey(0), 2)
+    all_in = jnp.array([True, True])
+    st_all, m_all = alg.round_step(state, batch, survivors=all_in)
+    st_none, _ = alg.round_step(state, batch)
+    # a full quorum is exactly the unmasked round
+    for a, b in zip(jax.tree_util.tree_leaves(st_all.y_hat),
+                    jax.tree_util.tree_leaves(st_none.y_hat)):
+        assert float(jnp.max(jnp.abs(a - b))) < 1e-6
+    assert float(m_all["quorum_frac"]) == 1.0
+
+    surv = jnp.array([True, False])
+    st_q, m_q = alg.round_step(state, batch, survivors=surv)
+    assert float(m_q["quorum_frac"]) == 0.5
+    # excluded agent: cache reverted to z + c (content kept, not sent)
+    z1 = jax.tree_util.tree_leaves(st_q.z)
+    c0 = jax.tree_util.tree_leaves(state.c_up)
+    c1 = jax.tree_util.tree_leaves(st_q.c_up)
+    for z, c_old, c_new in zip(z1, c0, c1):
+        assert float(jnp.max(jnp.abs(c_new[1] - (z[1] + c_old[1])))) < 1e-6
+    # survivor keeps the normal small EF residual
+    for c_new in c1:
+        assert float(jnp.max(jnp.abs(c_new[0]))) < 8.0 / 255 + 1e-3
+    for leaf in jax.tree_util.tree_leaves(st_q.y_hat):
+        assert bool(jnp.all(jnp.isfinite(leaf)))
+
+
 def test_ef_caches_bounded():
     # range generously covers the z dynamics → cache stays within one step
     alg = DeployFedLT(cfg=CFG, n_epochs=1, gamma=0.05, rho=10.0,

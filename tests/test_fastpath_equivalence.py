@@ -28,9 +28,10 @@ MSG = message_bytes(10000, 10.0)
 
 SYNC_SCENARIOS = ["walker-kiruna", "dual-station", "weather-dropout",
                   "hetero-compute", "lossy-uplink", "rain-fade",
-                  "ka-band-degraded", "conjunction-outage"]
+                  "ka-band-degraded", "conjunction-outage",
+                  "chaos-direct", "chaos-lossy"]
 ASYNC_SCENARIOS = ["walker-kiruna", "lossy-uplink", "rain-fade",
-                   "conjunction-outage"]
+                   "conjunction-outage", "chaos-direct", "chaos-lossy"]
 
 
 # Delivery is an eq dataclass: == compares every field, including any a

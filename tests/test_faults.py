@@ -1,0 +1,497 @@
+"""Fault injection (repro.faults): deterministic draws, fast-vs-oracle
+bit-equivalence on fault event streams, head failover, crash-vs-erasure
+EF semantics, quorum deadlines, and crash-consistent run recovery.
+
+The contracts under test (ISSUE 10):
+
+* fault draws are counter-based — order-independent, identical across
+  engines, stable under contact-plan horizon extension;
+* ``Engine(fast=True)`` and ``Engine(fast=False)`` produce bit-identical
+  Delivery AND fault/head_failover event streams on every chaos
+  scenario (checked via obs trace-diff, not just list comparison);
+* a crash wipes the EF residual (``resync_cache``), an erasure keeps it;
+* a round closed by its quorum deadline aggregates only the survivors
+  (survivors ⊆ attempted, quorum_frac ∈ [0, 1]);
+* a run killed mid-way resumes from the newest *intact* checkpoint with
+  bit-identical e_K / bytes_up curves.
+"""
+import dataclasses
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.constellation.links import message_bytes
+from repro.faults import (FaultModel, describe_faults, quorum_close_time,
+                          time_key)
+from repro.sim import Engine, get_scenario
+from repro.sim.engine import RoundResult
+
+MSG = message_bytes(10000, 10.0)
+CHAOS_SYNC = ["chaos-direct", "chaos-plane", "chaos-lossy"]
+
+
+# ---------------------------------------------------------------------------
+# draw determinism
+# ---------------------------------------------------------------------------
+
+def test_crash_draws_order_independent():
+    """Vectorized == per-element scalar == shuffled: the draw depends on
+    (seed, sat, bits(t_start)) only, never on array position."""
+    fm = FaultModel(crash_rate=0.3)
+    rng = np.random.default_rng(0)
+    sats = rng.integers(0, 1000, size=64)
+    t_st = rng.uniform(0.0, 1e6, size=64)
+    exp = rng.uniform(1.0, 600.0, size=64)
+    vec = fm.crash_mask(7, sats, t_st, exp)
+    one = np.array([bool(fm.crash_mask(7, np.array([s]), np.array([t]),
+                                       np.array([e]))[0])
+                    for s, t, e in zip(sats, t_st, exp)])
+    np.testing.assert_array_equal(vec, one)
+    perm = rng.permutation(64)
+    np.testing.assert_array_equal(
+        fm.crash_mask(7, sats[perm], t_st[perm], exp[perm]), vec[perm])
+    # distinct seeds / salts decorrelate
+    assert not np.array_equal(vec, fm.crash_mask(8, sats, t_st, exp))
+    fm2 = dataclasses.replace(fm, salt=fm.salt + 1)
+    assert not np.array_equal(vec, fm2.crash_mask(7, sats, t_st, exp))
+
+
+def test_crash_prob_model():
+    fm = FaultModel(crash_rate=0.1, crash_mtbf=1e5)
+    p = fm.crash_prob(np.array([0.0, 100.0, 1e5, 1e9]))
+    assert p[0] == pytest.approx(0.1)
+    assert np.all(np.diff(p) > 0) and p[-1] < 1.0 + 1e-12
+    assert not FaultModel().crashes_enabled
+    assert not FaultModel().active
+    assert FaultModel(crash_mtbf=1e6).crashes_enabled
+
+
+def test_station_dark_slot_keyed():
+    """All queries inside one slot agree; disjoint slots draw afresh;
+    extension (appending later times) never disturbs earlier draws."""
+    fm = FaultModel(gs_outage_rate=0.4, gs_outage_duration=600.0)
+    t = np.arange(0.0, 60000.0, 30.0)
+    dark = fm.station_dark(3, 0, t)
+    slots = np.floor(t / 600.0).astype(int)
+    for s in np.unique(slots):
+        assert len(set(dark[slots == s].tolist())) == 1, s
+    t_ext = np.arange(0.0, 120000.0, 30.0)
+    np.testing.assert_array_equal(fm.station_dark(3, 0, t_ext)[:len(t)],
+                                  dark)
+    assert not fm.station_dark(3, 0, np.array([np.nan, np.inf])).any()
+    assert 0.1 < dark.mean() < 0.8       # the rate actually bites
+
+
+def test_blocked_mask_stable_under_plan_extension():
+    """GS-outage blocking (engine ``_blocked``) must be a pure function
+    of the window rise times — extending the contact-plan horizon
+    appends new windows without re-rolling old draws."""
+    sc = get_scenario("chaos-direct")
+    eng = Engine(sc, seed=2)
+    before = [b.copy() for b in eng._blocked]
+    finites = [np.isfinite(r) for r in eng.plan.rises]
+    eng.plan.ensure(3.0 * eng.plan.horizon)
+    eng._refresh_blocked()
+    for g, (old, fin) in enumerate(zip(before, finites)):
+        # extension may back-fill former NaN padding slots with NEW
+        # windows; every window that existed before must keep its draw
+        w = old.shape[1]
+        np.testing.assert_array_equal(eng._blocked[g][:, :w][fin],
+                                      old[fin])
+    # and the mask really is dark where the fault model says so
+    fm, rises = sc.faults, eng.plan.rises[0]
+    finite = np.isfinite(rises)
+    dark = fm.station_dark(2, 0, np.where(finite, rises, 0.0)) & finite
+    assert (eng._blocked[0][:rises.shape[0], :rises.shape[1]] & dark).sum() \
+        == dark.sum()
+
+
+def test_fault_draw_properties_hypothesis():
+    hyp = pytest.importorskip("hypothesis")
+    from hypothesis import strategies as st
+
+    fm = FaultModel(crash_rate=0.25, gs_outage_rate=0.3)
+
+    @hyp.given(st.lists(st.tuples(st.integers(0, 10000),
+                                  st.floats(0.0, 1e8, allow_nan=False),
+                                  st.floats(0.0, 1e4, allow_nan=False)),
+                        min_size=1, max_size=50),
+               st.randoms())
+    @hyp.settings(deadline=None, max_examples=100)
+    def check(flights, rnd):
+        sats = np.array([f[0] for f in flights])
+        ts = np.array([f[1] for f in flights])
+        ex = np.array([f[2] for f in flights])
+        vec = fm.crash_mask(11, sats, ts, ex)
+        idx = list(range(len(flights)))
+        rnd.shuffle(idx)
+        idx = np.array(idx)
+        np.testing.assert_array_equal(
+            fm.crash_mask(11, sats[idx], ts[idx], ex[idx]), vec[idx])
+        # stability under extension: appending flights changes nothing
+        ext = fm.crash_mask(11, np.concatenate([sats, sats[:1]]),
+                            np.concatenate([ts, ts[:1] + 1.0]),
+                            np.concatenate([ex, ex[:1]]))
+        np.testing.assert_array_equal(ext[:len(flights)], vec)
+
+    check()
+
+
+def test_quorum_close_time_invariants():
+    # quorum met inside the deadline → closes exactly at the deadline
+    landed = [(10.0, 1), (20.0, 1), (30.0, 1), (500.0, 1)]
+    assert quorum_close_time(0.0, 100.0, 0.75, landed, 4) == 100.0
+    # quorum NOT met by the deadline → extends to the completing landing
+    assert quorum_close_time(0.0, 15.0, 0.75, landed, 4) == 30.0
+    assert quorum_close_time(0.0, 15.0, 1.0, landed, 4) == 500.0
+    # quorum unreachable → the last landing (nothing more will arrive)
+    assert quorum_close_time(0.0, 15.0, 1.0, landed[:2], 4) == 20.0
+    # no quorum requirement → plain deadline
+    assert quorum_close_time(0.0, 15.0, 0.0, [], 4) == 15.0
+    assert quorum_close_time(0.0, 15.0, 0.9, [], 0) == 15.0
+
+
+def test_quorum_close_time_hypothesis():
+    hyp = pytest.importorskip("hypothesis")
+    from hypothesis import strategies as st
+
+    @hyp.given(st.floats(0.0, 1e6, allow_nan=False),
+               st.floats(1.0, 1e5, allow_nan=False),
+               st.floats(0.0, 1.0, allow_nan=False),
+               st.lists(st.tuples(st.floats(0.0, 1e6, allow_nan=False),
+                                  st.integers(1, 50)), max_size=30),
+               st.integers(0, 100))
+    @hyp.settings(deadline=None, max_examples=200)
+    def check(t0, dl, q, rel_landed, n_att):
+        landed = [(t0 + dt, w) for dt, w in rel_landed]
+        t_close = quorum_close_time(t0, dl, q, landed, n_att)
+        # never closes before the deadline, never after the last landing
+        assert t_close >= t0 + dl - 1e-9
+        assert t_close <= max([t0 + dl] + [t for t, _ in landed]) + 1e-9
+        # the landed weight by t_close reaches quorum whenever possible
+        need = int(np.ceil(q * n_att))
+        total = sum(w for _, w in landed)
+        by_close = sum(w for t, w in landed if t <= t_close + 1e-9)
+        if total >= need:
+            assert by_close >= min(need, total)
+
+    check()
+
+
+def test_describe_labels():
+    assert describe_faults(None) == "none"
+    assert describe_faults(FaultModel()) == "none"
+    lab = describe_faults(FaultModel(crash_rate=0.05, gs_outage_rate=0.2,
+                                     head_failure_rate=0.3))
+    assert lab == "crash0.05-gs0.2x1800-head0.3"
+    assert time_key(1.5).dtype == np.uint64
+    with pytest.raises(ValueError, match="crash_rate"):
+        FaultModel(crash_rate=1.0)
+    with pytest.raises(ValueError, match="gs_outage_rate"):
+        FaultModel(gs_outage_rate=-0.1)
+
+
+# ---------------------------------------------------------------------------
+# fast vs oracle: fault streams are part of the equivalence contract
+# ---------------------------------------------------------------------------
+
+def _traced_rounds(name, fast, n=3, seed=1):
+    from repro.obs import tracing
+    eng = Engine(get_scenario(name), seed=seed, fast=fast)
+    with tracing() as trc:
+        t = 0.0
+        results = []
+        for _ in range(n):
+            res = eng.run_round(t, MSG)
+            results.append(res)
+            t += res.duration
+        return results, trc.records()
+
+
+@pytest.mark.parametrize("name", CHAOS_SYNC)
+def test_chaos_sync_bit_for_bit(name):
+    from repro.obs.summary import diff
+    rs_f, trace_f = _traced_rounds(name, fast=True)
+    rs_o, trace_o = _traced_rounds(name, fast=False)
+    for rf, ro in zip(rs_f, rs_o):
+        assert rf.to_dict() == ro.to_dict(), name
+    equal, report = diff(trace_f, trace_o)
+    assert equal, f"{name}: {report}"
+    # the scenario actually injects something
+    assert any(r.get("kind") == "fault" for r in trace_f), name
+
+
+def test_chaos_plane_failover_fires_and_diffs_clean():
+    """Head failovers are part of the diffed stream; their event fields
+    are structurally consistent with the round result."""
+    rs, trace = _traced_rounds("chaos-plane", fast=True, n=4)
+    evs = [r for r in trace if r.get("kind") == "head_failover"]
+    assert evs, "head_failure_rate=0.3 over 10 planes × 4 rounds"
+    spp = get_scenario("chaos-plane").walker.n_sats // \
+        get_scenario("chaos-plane").walker.n_planes
+    for ev in evs:
+        assert ev["new_head"] is None or ev["new_head"] != ev["head"]
+        assert 0 <= ev["n_lost"] + ev["n_salvaged"] <= spp
+        assert ev["t_detect"] >= ev["t_fail"]
+    for res in rs:
+        if res.failovers:
+            assert res.crashed is not None
+            for ev in res.failovers:
+                assert res.crashed[ev["head"]]       # dead head = crash
+        if res.aborted is not None:
+            # aborted sats never delivered anything this round
+            assert not (res.aborted & res.mask).any()
+
+
+@pytest.mark.parametrize("name", ["chaos-direct", "chaos-lossy"])
+def test_chaos_async_bit_for_bit(name):
+    d_f = Engine(get_scenario(name), seed=1).run_async(
+        0.0, MSG, n_deliveries=40)
+    d_o = Engine(get_scenario(name), seed=1, fast=False).run_async(
+        0.0, MSG, n_deliveries=40)
+    assert d_f == d_o, name
+    assert any(not d.delivered for d in d_f), name
+
+
+def test_round_result_fault_fields_roundtrip():
+    res = Engine(get_scenario("chaos-plane"), seed=1).run_round(0.0, MSG)
+    back = RoundResult.from_dict(res.to_dict())
+    assert back.to_dict() == res.to_dict()
+    if res.crashed is not None:
+        np.testing.assert_array_equal(back.crashed, res.crashed)
+    # a fault-free scenario round still roundtrips (fields absent)
+    res0 = Engine(get_scenario("walker-kiruna"), seed=1).run_round(0.0, MSG)
+    d0 = res0.to_dict()
+    assert "crashed" not in d0 and "faults" not in d0
+    assert RoundResult.from_dict(d0).crashed is None
+
+
+def test_gossip_head_failure_rejected():
+    sc = dataclasses.replace(get_scenario("plane-agg-gossip"),
+                             faults=FaultModel(head_failure_rate=0.5))
+    with pytest.raises(ValueError, match="gossip"):
+        Engine(sc)
+    eng = Engine(get_scenario("plane-agg-gossip"))
+    with pytest.raises(ValueError, match="gossip"):
+        eng.install_faults(FaultModel(head_failure_rate=0.5))
+    eng.install_faults(FaultModel(crash_rate=0.1))    # crashes are fine
+
+
+# ---------------------------------------------------------------------------
+# crash vs erasure EF semantics; quorum aggregation in the runner
+# ---------------------------------------------------------------------------
+
+def test_resync_cache_zeroes_crashed_rows_only():
+    from repro.core.error_feedback import resync_cache
+    cache = {"a": jnp.arange(12.0).reshape(4, 3),
+             "b": jnp.ones((4, 2, 2))}
+    crashed = np.array([False, True, False, True])
+    out = resync_cache(cache, crashed)
+    np.testing.assert_array_equal(np.asarray(out["a"][1]), 0.0)
+    np.testing.assert_array_equal(np.asarray(out["a"][3]), 0.0)
+    np.testing.assert_array_equal(np.asarray(out["a"][0]),
+                                  np.asarray(cache["a"][0]))
+    np.testing.assert_array_equal(np.asarray(out["b"][2]),
+                                  np.asarray(cache["b"][2]))
+
+
+DIM = 12
+
+
+def _problem(n_agents=100):
+    from repro.core.compression import UniformQuantizer
+    from repro.core.error_feedback import EFChannel
+    from repro.core.fedlt import FedLT
+    from repro.data.logistic import generate, make_local_loss
+    q = UniformQuantizer(levels=10, vmin=-1, vmax=1, clip=True)
+    data, _ = generate(jax.random.PRNGKey(0), n_agents=n_agents, m=16,
+                       dim=DIM)
+    loss = make_local_loss(eps=50.0, n_agents=n_agents)
+    alg = FedLT(loss=loss, n_epochs=1, gamma=0.005, rho=20.0,
+                uplink=EFChannel(q), downlink=EFChannel(q))
+    return data, alg, q
+
+
+def test_runner_crash_resync_and_quorum_series():
+    """An end-to-end chaos run: ef_resync events fire for crashes, the
+    survivors/quorum_frac series obey their invariants, and ledger meta
+    carries the fault label."""
+    from repro.api import Experiment
+    data, alg, q = _problem()
+    exp = Experiment("chaos-direct", alg, compressor=q,
+                     deadline=1200.0, quorum=0.5)
+    assert exp.ledger_meta()["faults"] == "crash0.08-gs0.15x1800"
+    assert exp.ledger_meta()["quorum"] == 0.5
+    st = exp.init(jnp.zeros((DIM,)), 100)
+    res = exp.run(st, data, 6, jax.random.PRNGKey(1), trace=True)
+    kinds = [r.get("kind") for r in res.records]
+    assert "fault" in kinds and "ef_resync" in kinds
+    surv = {r["step"]: r["value"] for r in res.records
+            if r.get("kind") == "series" and r.get("name") == "survivors"}
+    qf = {r["step"]: r["value"] for r in res.records
+          if r.get("kind") == "series" and r.get("name") == "quorum_frac"}
+    att = {r["round"]: r["n_active"] + r["n_lost"] for r in res.records
+           if r.get("kind") == "fl_round"}
+    assert set(surv) == set(range(6)) == set(qf)
+    for k in surv:
+        assert 0 <= surv[k] <= att[k]                # survivors ⊆ attempted
+        assert 0.0 <= qf[k] <= 1.0
+    # crashes actually removed someone at least once in 6 rounds
+    assert any(surv[k] < att[k] for k in surv)
+
+
+def test_deadline_closes_round_and_folds_stragglers():
+    """hetero-compute (15–60 s spread) under a 40 s deadline: slow sats
+    become stragglers, the round's time advance is capped near the
+    deadline, and (loss-robust) nothing diverges."""
+    from repro.api import Experiment
+    data, alg, q = _problem()
+
+    def run(deadline, quorum):
+        exp = Experiment("hetero-compute", alg, compressor=q,
+                         deadline=deadline, quorum=quorum)
+        st = exp.init(jnp.zeros((DIM,)), 100)
+        return exp.run(st, data, 4, jax.random.PRNGKey(1)).logs
+
+    base = run(None, 0.0)
+    dead = run(40.0, 0.25)
+    assert dead[-1].time < base[-1].time             # rounds close earlier
+    assert sum(l.n_lost for l in dead) > sum(l.n_lost for l in base)
+    assert all(np.isfinite(l.bytes_up) for l in dead)
+
+
+def test_deadline_async_rejected():
+    from repro.core.fedlt_sat import SpaceRunner
+    with pytest.raises(ValueError, match="sync-only"):
+        SpaceRunner(Engine(get_scenario("walker-kiruna")), mode="async",
+                    deadline=100.0)
+    with pytest.raises(ValueError, match="quorum"):
+        SpaceRunner(Engine(get_scenario("walker-kiruna")), quorum=1.5)
+
+
+# ---------------------------------------------------------------------------
+# crash-consistent recovery
+# ---------------------------------------------------------------------------
+
+def test_checkpoint_corruption_detected(tmp_path):
+    from repro.checkpoint.store import (latest_valid_step, restore, save,
+                                        verify)
+    tree = {"a": jnp.arange(6, dtype=jnp.float32)}
+    good = str(tmp_path / "ck_000001")
+    bad = str(tmp_path / "ck_000002")
+    save(good, tree, step=1)
+    save(bad, tree, step=2)
+    assert verify(good) and verify(bad)
+    with open(bad + ".npz", "r+b") as f:         # flip bytes mid-file
+        f.seek(30)
+        f.write(b"\xde\xad\xbe\xef")
+    assert not verify(bad)
+    with pytest.raises(ValueError, match="corrupt checkpoint"):
+        restore(bad, tree)
+    # recovery skips the corrupt step and falls back to the intact one
+    assert latest_valid_step(str(tmp_path), prefix="ck_") == 1
+    out = restore(good, tree)
+    np.testing.assert_array_equal(np.asarray(out["a"]),
+                                  np.asarray(tree["a"]))
+
+
+def test_checkpoint_missing_meta_skipped(tmp_path):
+    from repro.checkpoint.store import latest_valid_step, save
+    save(str(tmp_path / "r_000003"), {"a": jnp.zeros((2,))}, step=3)
+    save(str(tmp_path / "r_000005"), {"a": jnp.zeros((2,))}, step=5)
+    os.remove(str(tmp_path / "r_000005") + ".meta.json")
+    assert latest_valid_step(str(tmp_path), prefix="r_") == 3
+    (tmp_path / "r_000007.meta.json").write_text("{not json")
+    assert latest_valid_step(str(tmp_path), prefix="r_") == 3
+
+
+def test_kill_mid_run_resume_bit_identical(tmp_path):
+    """The tentpole recovery contract: run A checkpoints every round and
+    'crashes' (we corrupt its newest checkpoint, as a writer killed
+    mid-save would); run B resumes and must complete with e_K /
+    bytes_up / time curves bit-identical to an uninterrupted run —
+    including the replayed series in its trace."""
+    from repro.api import Experiment
+    from repro.core.fedlt import optimality_error
+    from repro.data.logistic import solve_global
+    data, alg, q = _problem()
+    x_star = solve_global(data, eps=50.0)
+    err = lambda s: float(optimality_error(s.x, x_star))  # noqa: E731
+
+    def exp():
+        return Experiment("chaos-lossy", alg, compressor=q,
+                          deadline=1200.0, quorum=0.5)
+
+    st0 = exp().init(jnp.zeros((DIM,)), 100)
+    full = exp().run(st0, data, 6, jax.random.PRNGKey(1), error_fn=err,
+                     log_every=1)
+
+    ck = str(tmp_path / "ck")
+    exp().run(st0, data, 6, jax.random.PRNGKey(1), error_fn=err,
+              log_every=1, checkpoint=ck)
+    # kill: the newest checkpoint is torn mid-write
+    from repro.checkpoint.store import latest_valid_step
+    newest = latest_valid_step(ck, prefix="round_")
+    assert newest == 6
+    with open(os.path.join(ck, f"round_{newest:06d}.npz"), "r+b") as f:
+        f.seek(20)
+        f.write(b"\x00\x00\x00\x00")
+    res = exp().run(st0, data, 6, jax.random.PRNGKey(1), error_fn=err,
+                    log_every=1, checkpoint=ck, resume=True, trace=True)
+    assert [dataclasses.asdict(l) for l in res.logs] == \
+        [dataclasses.asdict(l) for l in full.logs]
+    np.testing.assert_array_equal(np.asarray(res.state.x),
+                                  np.asarray(full.state.x))
+    np.testing.assert_array_equal(np.asarray(res.state.c_up),
+                                  np.asarray(full.state.c_up))
+    # the resumed trace replayed the prefix: full e_K series, resume mark
+    assert any(r.get("kind") == "resume" for r in res.records)
+    ek = [r for r in res.records
+          if r.get("kind") == "series" and r.get("name") == "e_K"]
+    assert [r["step"] for r in ek] == list(range(6))
+    assert [r["value"] for r in ek] == [l.error for l in full.logs]
+
+
+def test_resume_without_checkpoint_dir_rejected():
+    from repro.api import Experiment
+    data, alg, q = _problem()
+    exp = Experiment("walker-kiruna", alg, compressor=q)
+    st = exp.init(jnp.zeros((DIM,)), 100)
+    with pytest.raises(ValueError, match="checkpoint"):
+        exp.run(st, data, 2, jax.random.PRNGKey(1), resume=True)
+
+
+# ---------------------------------------------------------------------------
+# truncated-trace tolerance (obs readers survive a killed writer)
+# ---------------------------------------------------------------------------
+
+def test_trace_load_tolerates_truncated_final_line(tmp_path):
+    from repro.obs.trace import load
+    path = str(tmp_path / "t.jsonl")
+    rnd = dict(kind="round", duration=60.0, n_scheduled=4, n_delivered=4,
+               n_lost=0, bytes_air=100.0, engine="fast")
+    recs = [{"kind": "header", "schema": 2, "n_events": 2},
+            {"round": 0, "t0": 0.0, **rnd},
+            {"round": 1, "t0": 60.0, **rnd}]
+    body = "".join(json.dumps(r) + "\n" for r in recs)
+    with open(path, "w") as f:
+        f.write(body[:-25])                  # killed mid-append
+    with pytest.warns(UserWarning, match="truncated final record"):
+        out = load(path)
+    assert out == recs[:2]
+    # a malformed line mid-file is real corruption — still raises
+    with open(path, "w") as f:
+        f.write(json.dumps(recs[0]) + "\n{broken\n"
+                + json.dumps(recs[1]) + "\n")
+    with pytest.raises(json.JSONDecodeError):
+        load(path)
+    # summarize survives the truncated file end-to-end
+    from repro.obs.summary import summarize
+    with open(path, "w") as f:
+        f.write(body[:-25])
+    with pytest.warns(UserWarning):
+        assert "round" in summarize(load(path))
